@@ -1,0 +1,71 @@
+"""Paper §3 ablation — ternary/2/4/6/8-bit naive quantization + GPTQ.
+
+Reproduces the finding that drove Tiny-QMoE's design: ternary/2/4-bit
+naive quantization destroys a small model (accuracy → chance, weight error
+explodes) while 6/8-bit retains it, and GPTQ recovers part of the 4-bit
+loss but still trails naive 8-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, quantize, dequantize
+from repro.core import gptq
+from repro.models import lm as LM
+from repro.train.steps import cross_entropy
+
+from .common import emit, trained_tiny_model
+
+
+def _quantize_model(params, bits, mode="naive", calib=None, cfg=None):
+    def one(path, p):
+        name = jax.tree_util.keystr(path)
+        if p.ndim != 2 or p.size < 1024 or "norm" in name:
+            return p
+        if mode == "gptq":
+            x = calib.reshape(-1, calib.shape[-1])
+            if x.shape[-1] != p.shape[-1]:
+                qc = QuantConfig(bits=bits, granularity="per_channel")
+                return dequantize(quantize(p, qc))
+            h = gptq.accumulate_hessian(gptq.init_hessian(p.shape[1]), x)
+            return dequantize(gptq.gptq_quantize(
+                p, h, QuantConfig(bits=bits)))
+        qc = QuantConfig(bits=bits, granularity="per_tensor")  # paper-naive
+        return dequantize(quantize(p, qc))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def main():
+    cfg, params, data = trained_tiny_model(steps=150)
+    batch = data.batch_at(9999)
+
+    @jax.jit
+    def loss_of(p):
+        logits, _, _ = LM.forward(p, cfg, batch["tokens"])
+        return cross_entropy(logits, batch["labels"])
+
+    base = float(loss_of(params))
+    emit("bitwidth.fp32.loss", f"{base:.4f}", "trained smoke model")
+
+    for bits in (1.5, 2, 4, 6, 8):
+        qp = _quantize_model(params, bits, mode="naive")
+        l = float(loss_of(qp))
+        tag = "ternary" if bits == 1.5 else f"{int(bits)}bit"
+        emit(f"bitwidth.naive.{tag}.loss", f"{l:.4f}",
+             f"delta={l-base:+.3f} (paper: <=4bit destroys, 8bit fine)")
+
+    # GPTQ on the attention/FFN inputs (calibration = real activations ~ embeds)
+    calib = jax.random.normal(jax.random.PRNGKey(0),
+                              (512, cfg.d_model)) * 0.5
+    for bits in (4, 8):
+        qp = _quantize_model(params, bits, mode="gptq", calib=calib, cfg=cfg)
+        l = float(loss_of(qp))
+        emit(f"bitwidth.gptq.{int(bits)}bit.loss", f"{l:.4f}",
+             f"delta={l-base:+.3f} (paper: GPTQ-4bit helps, still < 8bit)")
+
+
+if __name__ == "__main__":
+    main()

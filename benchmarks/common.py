@@ -1,0 +1,61 @@
+"""Shared benchmark helpers: model building, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm as LM
+from repro.train.data import DataConfig, DataPipeline
+from repro.train.optimizer import AdamWConfig
+from repro.train.steps import TrainConfig, make_train_step, init_train_state
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """name,value,derived CSV row (the harness contract)."""
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 5):
+    """Median wall time of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def trained_tiny_model(arch_id: str = "llama3.2-1b", steps: int = 60,
+                       seed: int = 0):
+    """A briefly-trained smoke model — weights with *real* learned structure
+    (random-init weights are incompressible; the paper compresses trained
+    checkpoints)."""
+    cfg = get_config(arch_id).smoke
+    params = LM.init_lm(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    data = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, batch=16,
+                                   seq_len=32, seed=seed))
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2, warmup_steps=10,
+                                             total_steps=max(steps, 20)))
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    for i in range(steps):
+        state, _ = step(state, data.batch_at(i))
+    return cfg, state["params"], data
+
+
+def synthetic_trained_weights(rng, shape, kurtotic: bool = True):
+    """Weight tensor with trained-LLM-like statistics: heavy-tailed
+    (Laplace-ish) per-row distributions.  Per-channel int8 quantization of
+    such rows concentrates codes near the zero-point, which is what makes
+    the paper's dictionary effective on real checkpoints."""
+    if kurtotic:
+        w = rng.laplace(0.0, 0.02, size=shape).astype(np.float32)
+    else:
+        w = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+    return w

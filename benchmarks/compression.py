@@ -1,0 +1,164 @@
+"""Paper Table 1 — compression results (size triple + ratios).
+
+Two measurements:
+  1. *paper-mechanism @ tiny scale*: a briefly-trained smoke llama3.2 model,
+     quantized per the paper, compressed with the paper-faithful escape
+     codec AND the TPU blocked codec.  Real learned weight structure.
+  2. *paper-scale statistics*: llama3.2-1B / 3B tensor shapes with
+     synthetic trained-like (heavy-tailed) weights, sampled per tensor —
+     reproduces the 1469→125 MB scale of Table 1 without shipping real
+     checkpoints (none available offline; see EXPERIMENTS.md §Fidelity).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import codec, blocked_codec
+from repro.core.quant import QuantConfig, quantize
+from repro.core.policy import CompressionPolicy
+from repro.serve.engine import build_serve_params
+
+from .common import emit, trained_tiny_model, synthetic_trained_weights
+
+
+def tiny_scale_table():
+    cfg, params, _ = trained_tiny_model(steps=80)
+    dense_bytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(params))
+
+    st = build_serve_params(params, CompressionPolicy(mode="compressed",
+                                                      min_weight_size=1024))
+    quant_bytes = 0
+    for _, leaf in jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=lambda x: hasattr(x, "shape"))[0]:
+        if leaf.ndim >= 2 and leaf.size >= 1024:
+            quant_bytes += leaf.size  # 1 B/weight
+        else:
+            quant_bytes += leaf.nbytes
+    comp_bytes = st.stats["compressed"] + st.stats["quant"] + st.stats["dense"]
+    emit("table1.tiny.dense_mb", f"{dense_bytes/2**20:.3f}",
+         "fp32 smoke llama3.2 (trained 80 steps)")
+    emit("table1.tiny.quant_mb", f"{quant_bytes/2**20:.3f}", "int8/weight")
+    emit("table1.tiny.compressed_mb", f"{comp_bytes/2**20:.3f}",
+         "blocked codec + table")
+    emit("table1.tiny.ratio_vs_dense", f"{dense_bytes/comp_bytes:.2f}", "")
+
+
+def _model_stream_stats(cfg, rng, sample_weights: int = 40_000_000):
+    """Quantize synthetic trained-like weights tensor-by-tensor, build one
+    model-wide dictionary from a sample, then measure hit rates on the rest.
+    Memory stays bounded (per-tensor streaming, as the paper's per-layer
+    files do)."""
+    qcfg = QuantConfig(bits=8, granularity="per_channel")
+    d, ff, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    shapes = []
+    for _ in range(L):
+        shapes += [(cfg.n_heads * hd, d), (cfg.n_kv_heads * hd, d),
+                   (cfg.n_kv_heads * hd, d), (d, cfg.n_heads * hd),
+                   (ff, d), (ff, d), (d, ff)]
+    shapes.append((v, d))
+
+    total_weights = sum(a * b for a, b in shapes)
+    budget = sample_weights
+    streams = []
+    for shape in shapes:
+        n = shape[0] * shape[1]
+        if budget <= 0:
+            break
+        take = min(n, budget)
+        rows = max(1, take // shape[1])
+        w = synthetic_trained_weights(rng, (rows, shape[1]))
+        qt = quantize(jnp.asarray(w), qcfg)
+        streams.append(np.asarray(qt.values, dtype=np.uint8).reshape(-1))
+        budget -= rows * shape[1]
+
+    sampled = np.concatenate(streams)
+    table = codec.find_frequent_sequences([sampled], max_codes=65535)
+    # hit rate on a held-out tensor
+    w_test = synthetic_trained_weights(rng, (4096, d))
+    qt = quantize(jnp.asarray(w_test), qcfg)
+    stream = codec.compress_array(np.asarray(qt.values, np.uint8), table)
+    n_esc = int((stream == codec.ESCAPE).sum())
+    grams = w_test.size // 4
+    hit = 1.0 - n_esc / grams
+    # bytes/weight in the escape-stream format:
+    # hit gram: 2 B per 4 weights; miss: 2 + 8 B per 4 weights
+    bpw = (hit * 2 + (1 - hit) * 10) / 4
+    table_bytes = codec.table_nbytes(table)
+    comp_bytes = total_weights * bpw + table_bytes
+    return {
+        "total_weights": total_weights,
+        "hit_rate": hit,
+        "bytes_per_weight": bpw,
+        "dense_mb": total_weights * 2 / 2**20,    # paper baseline is fp16
+        "quant_mb": total_weights / 2**20,
+        "comp_mb": comp_bytes / 2**20,
+    }
+
+
+def paper_scale_table():
+    rng = np.random.default_rng(0)
+    for arch in ("llama3.2-1b", "llama3.2-3b"):
+        cfg = get_config(arch).full
+        s = _model_stream_stats(cfg, rng)
+        tag = arch.replace("llama3.2-", "")
+        emit(f"table1.{tag}.dense_mb", f"{s['dense_mb']:.0f}",
+             "fp16 baseline (paper: 2858/6584)")
+        emit(f"table1.{tag}.quant_mb", f"{s['quant_mb']:.0f}",
+             "int8 (paper: 1469/3522)")
+        emit(f"table1.{tag}.compressed_mb", f"{s['comp_mb']:.0f}",
+             f"escape stream, hit={s['hit_rate']:.3f} "
+             f"({s['bytes_per_weight']:.3f} B/w) on synthetic trained-like "
+             "weights")
+        emit(f"table1.{tag}.ratio_vs_dense",
+             f"{s['dense_mb']/s['comp_mb']:.1f}",
+             "paper: 22.8x / 35.0x on real checkpoints")
+
+
+def paper_verbatim_table():
+    """Reproduce Table 1 via the paper's *verbatim* Listing 1+3 pipeline.
+
+    Listing 1 stores DEQUANTIZED FLOATS back into ``param.data``; Listing 3
+    then does ``.astype(np.uint8)`` — truncating every |w|<1 float to 0.
+    The byte stream is therefore ~100% zeros: one dictionary entry, every
+    gram hits, giving the format floor of 2 B per ``seq_len`` weights.
+    This is (a) maximally compressible and (b) LOSSY — the decompressed
+    bytes reconstruct the truncated stream, not the quantized weights.
+    See EXPERIMENTS.md §Fidelity for the full analysis.
+    """
+    rng = np.random.default_rng(0)
+    w = rng.laplace(0.0, 0.02, size=(1 << 20,)).astype(np.float32)
+    mn, mx = w.min(), w.max()
+    scale = (mx - mn) / 255.0
+    zero = np.round(-mn / scale)
+    q = np.clip(np.round(w / scale) + zero, 0, 255)
+    deq = (scale * (q - zero)).astype(np.float32)
+    stream = deq.astype(np.uint8)               # paper Listing 3, line 1
+    frac_zero = float((stream == 0).mean())
+    table = codec.find_frequent_sequences([stream])
+    enc = codec.compress_array(stream, table)
+    bpw = enc.nbytes / stream.size
+    emit("table1.verbatim.zero_fraction", f"{frac_zero:.4f}",
+         "float->uint8 truncation zeroes the stream (lossy)")
+    emit("table1.verbatim.bytes_per_weight", f"{bpw:.4f}",
+         "format floor = 2/seq_len = 0.5 B/w at seq_len=4")
+    emit("table1.verbatim.ratio_vs_fp16", f"{2.0/bpw:.1f}",
+         "paper reports 22.8x/35.0x; needs seq_len~23 at 100% hits — "
+         "not reachable with the published seq_len=4 format")
+    # losslessness check of the codec itself on this stream
+    out = codec.decompress_array(enc, table, stream.size)
+    emit("table1.verbatim.codec_lossless", int((out == stream).all()),
+         "codec is exact over the (already-truncated) stream")
+
+
+def main():
+    tiny_scale_table()
+    paper_scale_table()
+    paper_verbatim_table()
+
+
+if __name__ == "__main__":
+    main()

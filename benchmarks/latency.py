@@ -1,0 +1,76 @@
+"""Paper §5 latency discussion — decompression overhead on CPU.
+
+The paper's own latency numbers are CPU-measured (Xeon 6130): dense vs
+quantized vs compressed per-example latency, where compressed pays the
+layer-by-layer decode cost.  This container is also CPU, so these are real
+wall-clock measurements of the same pipeline (smoke-scale model).
+
+Also measures the microbench the serving engine cares about: dict_decode +
+dequant_matmul throughput vs a dense matmul of the same shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import codec
+from repro.core.blocked_codec import build_lut
+from repro.core.compressed import pack_linear, quantize_linear
+from repro.core.policy import CompressionPolicy
+from repro.kernels import ops
+from repro.serve.engine import build_serve_params, generate
+
+from .common import emit, time_call, trained_tiny_model
+
+
+def serving_latency():
+    cfg, params, _ = trained_tiny_model(steps=60)
+    toks = jnp.ones((4, 16), jnp.int32)
+
+    modes = {"dense": (params, None)}
+    for mode in ("quant", "compressed"):
+        st = build_serve_params(params, CompressionPolicy(
+            mode=mode, min_weight_size=1024))
+        modes[mode] = (st.params, st.lut)
+
+    for mode, (p, lut) in modes.items():
+        t = time_call(lambda p=p, lut=lut: generate(p, cfg, toks, lut=lut,
+                                                    max_new=8),
+                      warmup=1, iters=3)
+        emit(f"latency.generate8.{mode}_s", f"{t:.4f}",
+             "batch=4 prompt=16 (paper: compressed ~1.5-5x dense on CPU)")
+
+
+def kernel_latency():
+    rng = np.random.default_rng(0)
+    n, k, m = 1024, 1024, 256
+    w = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32) * 0.02)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    ql = quantize_linear(w)
+    table = codec.find_frequent_sequences([np.asarray(ql.values)])
+    lut = jnp.asarray(build_lut(table))
+    packed = pack_linear(w, table, np.asarray(lut))
+
+    dense = jax.jit(lambda x: x @ w.T)
+    quant = jax.jit(lambda x: ops.dequant_matmul(x, ql.values, ql.scale,
+                                                 ql.zero, impl="ref"))
+    comp = jax.jit(lambda x: ops.decode_dequant_matmul(x, packed, lut,
+                                                       impl="ref"))
+    td = time_call(dense, x)
+    tq = time_call(quant, x)
+    tc = time_call(comp, x)
+    emit("latency.matmul_1024x1024.dense_us", f"{td*1e6:.1f}", "")
+    emit("latency.matmul_1024x1024.quant_us", f"{tq*1e6:.1f}",
+         f"{tq/td:.2f}x dense")
+    emit("latency.matmul_1024x1024.compressed_us", f"{tc*1e6:.1f}",
+         f"{tc/td:.2f}x dense (decode amortized per call)")
+
+
+def main():
+    serving_latency()
+    kernel_latency()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline analysis (deliverable g) — three terms per (arch × shape × mesh).
+
+Reads the dry-run JSON records (results/dryrun/*.json) produced by
+``repro.launch.dryrun`` and derives, per cell:
+
+    compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_device / HBM_BW
+    collective_s = collective_link_bytes_per_device / LINK_BW
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (serve) and the
+useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips).
+
+Hardware model (TPU v5e-class, per assignment):
+    197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+Ring-collective link-byte conversion (n = shard count of the op's mesh
+axes; we use the mesh size as the bound): all-gather / reduce-scatter move
+(n-1)/n of the result bytes over the busiest link; all-reduce = 2×(n-1)/n;
+all-to-all = (n-1)/n; collective-permute = 1×.  HLO shapes are per-device
+(post-SPMD), so byte sums are already per-chip.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES
+
+from .common import emit
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s
+LINK_BW = 50e9             # B/s per ICI link
+
+RING_FACTOR = {
+    "all-gather": 1.0, "reduce-scatter": 1.0, "all-reduce": 2.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+    "collective-broadcast": 1.0, "ragged-all-to-all": 1.0,
+}
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    cfg = get_config(arch_id).full
+    sh = SHAPES[shape_name]
+    if sh["kind"] == "train":
+        tokens = sh["seq"] * sh["batch"]
+        return 6.0 * cfg.n_active_params() * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["seq"] * sh["batch"]
+        return 2.0 * cfg.n_active_params() * tokens
+    # decode: one new token per sequence
+    return 2.0 * cfg.n_active_params() * sh["batch"]
+
+
+def cell_roofline(rec: dict) -> dict | None:
+    if not rec.get("ok") or "cost" not in rec:
+        return None
+    chips = 512 if rec["mesh"] == "multi" else 256
+    # prefer the trip-weighted HLO walk (hlo_stats.hlo_cost); XLA's own
+    # cost_analysis counts while bodies once
+    hc = rec.get("hlo_cost", {})
+    flops_dev = hc.get("flops") or rec["cost"].get("flops", 0.0)
+    bytes_dev = hc.get("bytes") or rec["cost"].get("bytes accessed", 0.0)
+    coll = rec.get("collectives", {})
+    link_bytes = sum(RING_FACTOR.get(k, 1.0) * v
+                     for k, v in coll.get("bytes_by_kind", {}).items())
+    mf = model_flops(rec["arch"], rec["shape"])
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = link_bytes / LINK_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])
+    total_hlo_flops = flops_dev * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dom[0],
+        "model_flops": mf,
+        "useful_ratio": mf / total_hlo_flops if total_hlo_flops else 0.0,
+        "hbm_gib_per_dev": rec.get("memory", {}).get(
+            "total_hbm_bytes", 0) / 2**30,
+        "step_s_bound": max(compute_s, memory_s, coll_s),
+        "roofline_frac": (mf / chips / PEAK_FLOPS) /
+                          max(compute_s, memory_s, coll_s, 1e-30),
+    }
+
+
+def load_all(dryrun_dir: str = "results/dryrun") -> list[dict]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        r = cell_roofline(rec)
+        if r:
+            out.append(r)
+    return out
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        emit("roofline.error", 0, "no dry-run records; run "
+             "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return
+    for r in rows:
+        key = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        emit(f"{key}.compute_s", f"{r['compute_s']:.4e}", "")
+        emit(f"{key}.memory_s", f"{r['memory_s']:.4e}", "")
+        emit(f"{key}.collective_s", f"{r['collective_s']:.4e}", "")
+        emit(f"{key}.dominant", r["dominant"],
+             f"useful_ratio={r['useful_ratio']:.3f} "
+             f"roofline_frac={r['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only compression,...]
+
+Emits ``name,value,derived`` CSV rows:
+  compression — paper Table 1 (size triple, ratios)
+  accuracy    — paper Tables 2-4 (dense/quant/compressed parity + latency)
+  bitwidth    — paper §3 ablation (ternary..8bit naive, GPTQ)
+  latency     — paper §5 CPU latency discussion + kernel microbench
+  roofline    — deliverable (g): three terms per (arch × shape × mesh)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = ["compression", "accuracy", "bitwidth", "latency", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(MODULES))
+    args = ap.parse_args()
+    picked = args.only.split(",") if args.only else MODULES
+
+    failures = 0
+    for name in picked:
+        print(f"# === benchmarks.{name} ===", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:  # noqa: BLE001 — keep the harness sweeping
+            failures += 1
+            print(f"{name}.ERROR,1,", flush=True)
+            traceback.print_exc()
+        print(f"# {name} done in {time.monotonic()-t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

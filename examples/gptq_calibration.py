@@ -1,0 +1,78 @@
+"""GPTQ calibration example — data-dependent quantization (paper §3).
+
+Quantizes one trained layer three ways (naive per-tensor like the paper's
+Listing 1, naive per-channel, GPTQ with real calibration activations) and
+reports the task-loss degradation of each, reproducing the paper's reason
+for adopting GPTQ.
+
+    PYTHONPATH=src python examples/gptq_calibration.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import gptq
+from repro.core.quant import QuantConfig, quantize, dequantize
+from repro.models import lm as LM
+from repro.train.data import DataConfig, DataPipeline
+from repro.train.optimizer import AdamWConfig
+from repro.train.steps import (TrainConfig, make_train_step,
+                               init_train_state, cross_entropy)
+
+
+def main():
+    cfg = get_config("llama3.2-1b").smoke
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    data = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, batch=16,
+                                   seq_len=32))
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2, warmup_steps=10,
+                                             total_steps=150))
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    for i in range(120):
+        state, _ = step(state, data.batch_at(i))
+    params = state["params"]
+
+    batch = data.batch_at(9000)
+
+    @jax.jit
+    def eval_loss(p):
+        logits, _, _ = LM.forward(p, cfg, batch["tokens"])
+        return cross_entropy(logits, batch["labels"])
+
+    base = float(eval_loss(params))
+    print(f"fp32 loss: {base:.4f}")
+
+    # Calibration: capture the real input activations of every mlp.w_gate
+    # by running the embed+attn prefix — here we approximate with the
+    # residual-stream statistics (hidden states after the embed).
+    toks = data.batch_at(500)["tokens"]
+    hidden, _, _ = LM.forward(params, cfg, toks, return_hidden=True)
+    calib = hidden.reshape(-1, cfg.d_model)
+
+    bits = 4
+    for scheme in ("naive-per-tensor", "naive-per-channel", "gptq"):
+        def q_one(path, p):
+            name = jax.tree_util.keystr(path)
+            if p.ndim != 2 or p.size < 1024 or "norm" in name:
+                return p
+            if scheme == "naive-per-tensor":
+                return dequantize(quantize(p, QuantConfig(
+                    bits=bits, granularity="per_tensor")))
+            if scheme == "naive-per-channel":
+                return dequantize(quantize(p, QuantConfig(
+                    bits=bits, granularity="per_channel")))
+            if p.shape[1] != cfg.d_model:
+                return dequantize(quantize(p, QuantConfig(
+                    bits=bits, granularity="per_channel")))
+            h = gptq.accumulate_hessian(gptq.init_hessian(p.shape[1]), calib)
+            return dequantize(gptq.gptq_quantize(p, h, QuantConfig(bits=bits)))
+
+        qp = jax.tree_util.tree_map_with_path(q_one, params)
+        l = float(eval_loss(qp))
+        print(f"{scheme:20s} {bits}-bit loss: {l:.4f}  (delta {l-base:+.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro — Tiny-QMoE as a production multi-pod JAX framework.
+
+Layers: core (quant+codec), models (assigned arch zoo), kernels (Pallas),
+sharding, serve, train, configs, launch.  See DESIGN.md.
+"""
+__version__ = "1.0.0"

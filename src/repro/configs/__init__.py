@@ -1,0 +1,26 @@
+"""Architecture registry — 10 assigned archs + the paper's Llama-3.2 pair.
+
+``get_config(arch_id)`` returns the registered ArchEntry with exact
+published hyperparameters (FULL) and a reduced same-family SMOKE config.
+"""
+from .base import ArchEntry, get, all_archs, register
+
+# Import for registration side effects.
+from . import (seamless_m4t_medium, mamba2_2_7b, qwen3_4b, llama3_405b,
+               internlm2_1_8b, qwen2_7b, deepseek_v2_lite_16b,
+               kimi_k2_1t_a32b, internvl2_2b, zamba2_1_2b, llama32_paper)
+
+ASSIGNED_ARCHS = [
+    "seamless-m4t-medium", "mamba2-2.7b", "qwen3-4b", "llama3-405b",
+    "internlm2-1.8b", "qwen2-7b", "deepseek-v2-lite-16b",
+    "kimi-k2-1t-a32b", "internvl2-2b", "zamba2-1.2b",
+]
+PAPER_ARCHS = ["llama3.2-1b", "llama3.2-3b"]
+
+
+def get_config(arch_id: str) -> ArchEntry:
+    return get(arch_id)
+
+
+__all__ = ["ArchEntry", "get_config", "all_archs", "ASSIGNED_ARCHS",
+           "PAPER_ARCHS"]

@@ -1,0 +1,31 @@
+"""Tiny-QMoE core: quantization, dictionary compression, packed params."""
+from .quant import (QuantConfig, QuantizedTensor, TernaryTensor, quantize,
+                    dequantize, fake_quant, quantization_error)
+from .gptq import (gptq_quantize, accumulate_hessian, init_hessian,
+                   calibrate_and_quantize, gptq_layer_error)
+from .codec import (ESCAPE, find_frequent_sequences, compress_array,
+                    decompress_array, compress_model_arrays,
+                    decompress_model_arrays, compression_ratio,
+                    CompressedStream)
+from .blocked_codec import (BlockedCompressed, encode_blocked,
+                            decode_blocked_jnp, build_lut, decode_to)
+from .lzw import lzw_encode, lzw_decode, lzw_ratio
+from .compressed import (QuantLinear, PackedLinear, quantize_linear,
+                         pack_linear, planned_packed_specs,
+                         planned_quant_specs, lut_spec)
+from .policy import CompressionPolicy
+
+__all__ = [
+    "QuantConfig", "QuantizedTensor", "TernaryTensor", "quantize",
+    "dequantize", "fake_quant", "quantization_error",
+    "gptq_quantize", "accumulate_hessian", "init_hessian",
+    "calibrate_and_quantize", "gptq_layer_error",
+    "ESCAPE", "find_frequent_sequences", "compress_array",
+    "decompress_array", "compress_model_arrays", "decompress_model_arrays",
+    "compression_ratio", "CompressedStream",
+    "BlockedCompressed", "encode_blocked", "decode_blocked_jnp", "build_lut",
+    "decode_to", "lzw_encode", "lzw_decode", "lzw_ratio",
+    "QuantLinear", "PackedLinear", "quantize_linear", "pack_linear",
+    "planned_packed_specs", "planned_quant_specs", "lut_spec",
+    "CompressionPolicy",
+]

@@ -1,0 +1,183 @@
+"""TPU-parallel blocked dictionary codec — the hardware adaptation.
+
+The paper's escape stream (``codec.py``) decodes serially: the position of
+codeword *i* depends on how many escapes precede it.  On a TPU that is a
+non-starter — decode must be a data-parallel gather.  This module keeps the
+paper's *dictionary* (same tables, same len-4 byte grams) but re-lays the
+stream into a fixed-rate blocked format:
+
+  per tensor, blocks of ``block_weights`` quantized uint8 weights
+    codes:    uint16[n_blocks, slots]   slot = one len-S gram; ESCAPE literal
+    literals: uint8 [n_blocks, lit_cap, S]  escape grams, packed per block
+    nlit:     int32 [n_blocks]          how many escapes in each block
+
+Every block decodes independently: ``rank = cumsum(is_escape) - 1`` inside
+the block recovers each escape's literal row.  All three planes are
+rectangular → shardable with a plain PartitionSpec on the block axis, and
+encode aligns block boundaries to TP shard boundaries (``shard_blocks``).
+
+``decode_blocked_jnp`` is the pure-jnp oracle; the Pallas VMEM kernel lives
+in ``repro.kernels.dict_decode``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codec import ESCAPE, DEFAULT_SEQ_LEN
+
+DEFAULT_BLOCK_WEIGHTS = 4096
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BlockedCompressed:
+    """One tensor in the blocked format (+ shared LUT reference)."""
+
+    codes: jax.Array      # uint16[n_blocks, slots]
+    literals: jax.Array   # uint8[n_blocks, lit_cap, S]
+    nlit: jax.Array       # int32[n_blocks]
+    lut: jax.Array        # uint8[n_codes, S] — usually shared across tensors
+    orig_len: int         # static
+    shape: tuple          # static
+    seq_len: int = DEFAULT_SEQ_LEN
+
+    def tree_flatten(self):
+        return ((self.codes, self.literals, self.nlit, self.lut),
+                (self.orig_len, self.shape, self.seq_len))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, literals, nlit, lut = children
+        orig_len, shape, seq_len = aux
+        return cls(codes, literals, nlit, lut, orig_len, shape, seq_len)
+
+    @property
+    def payload_nbytes(self) -> int:
+        """Bytes for this tensor, excluding the (shared) LUT."""
+        return int(self.codes.size * 2 + self.literals.size + self.nlit.size * 4)
+
+    @property
+    def slots(self) -> int:
+        return self.codes.shape[1]
+
+
+def build_lut(table: dict, seq_len: int = DEFAULT_SEQ_LEN) -> np.ndarray:
+    """Dense decode LUT from a {gram-tuple -> code} table (codec.py builder).
+
+    Row ``code`` holds the gram. Row for ESCAPE never exists (codes are dense
+    in [0, len(table))), but we pad one zero row so LUT[code] is always safe.
+    """
+    n = len(table)
+    lut = np.zeros((max(n, 1) + 1, seq_len), dtype=np.uint8)
+    for seq, code in table.items():
+        lut[code] = np.asarray(seq, dtype=np.uint8)
+    return lut
+
+
+def encode_blocked(weights: np.ndarray, table: dict,
+                   lut: np.ndarray | None = None,
+                   block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                   seq_len: int = DEFAULT_SEQ_LEN) -> BlockedCompressed:
+    """Encode a uint8 tensor into the blocked format (host-side numpy)."""
+    assert block_weights % seq_len == 0
+    flat = np.ascontiguousarray(weights).reshape(-1).astype(np.uint8)
+    orig_len = flat.size
+    slots_pb = block_weights // seq_len
+
+    pad = (-orig_len) % block_weights
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.uint8)])
+    grams = flat.reshape(-1, seq_len)
+    n_blocks = len(grams) // slots_pb
+
+    # Vectorized table lookup via packed uint keys.
+    keys = grams.astype(np.uint64)
+    packed = np.zeros(len(grams), np.uint64)
+    for j in range(seq_len):
+        packed = (packed << np.uint64(8)) | keys[:, j]
+    klut = {}
+    for seq, code in table.items():
+        k = 0
+        for v in seq:
+            k = (k << 8) | int(v)
+        klut[k] = code
+    codes_flat = np.array([klut.get(int(k), ESCAPE) for k in packed],
+                          dtype=np.uint16)
+
+    codes = codes_flat.reshape(n_blocks, slots_pb)
+    esc = codes == ESCAPE
+    nlit = esc.sum(axis=1).astype(np.int32)
+    lit_cap = int(nlit.max()) if n_blocks else 0
+    lit_cap = max(lit_cap, 1)
+    literals = np.zeros((n_blocks, lit_cap, seq_len), dtype=np.uint8)
+    grams_b = grams.reshape(n_blocks, slots_pb, seq_len)
+    for b in np.nonzero(nlit)[0]:
+        literals[b, : nlit[b]] = grams_b[b][esc[b]]
+
+    if lut is None:
+        lut = build_lut(table, seq_len)
+    return BlockedCompressed(
+        codes=jnp.asarray(codes), literals=jnp.asarray(literals),
+        nlit=jnp.asarray(nlit), lut=jnp.asarray(lut),
+        orig_len=orig_len, shape=tuple(weights.shape), seq_len=seq_len)
+
+
+def decode_blocked_jnp(bc: BlockedCompressed) -> jax.Array:
+    """Pure-jnp parallel decode — oracle for the Pallas kernel.
+
+    Fully vectorized: dictionary gather + per-block escape-rank gather.
+    """
+    nb, slots = bc.codes.shape
+    s = bc.seq_len
+    codes = bc.codes.astype(jnp.int32)
+    is_esc = codes == ESCAPE
+    # Dictionary path: LUT gather (escape rows read row 0 harmlessly).
+    safe = jnp.where(is_esc, 0, codes)
+    from_dict = bc.lut[safe]                              # (nb, slots, s)
+    # Literal path: rank of each escape within its block recovers its row.
+    rank = jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1
+    rank = jnp.clip(rank, 0, bc.literals.shape[1] - 1)
+    from_lit = jax.vmap(lambda lit, r: lit[r])(bc.literals, rank)  # (nb, slots, s)
+    out = jnp.where(is_esc[:, :, None], from_lit, from_dict)
+    return out.reshape(-1)[: bc.orig_len]
+
+
+def decode_to(bc: BlockedCompressed, scale: jax.Array, zero: jax.Array,
+              dtype=jnp.bfloat16) -> jax.Array:
+    """Decode + dequantize to a dense float tensor of the original shape.
+
+    ``scale``/``zero`` follow the per-channel row layout of
+    ``QuantConfig(granularity='per_channel')`` against ``bc.shape``.
+    """
+    flat = decode_blocked_jnp(bc).astype(jnp.float32)
+    x = flat.reshape(bc.shape)
+    # scale/zero broadcast: (rows, 1) against (rows, cols)
+    if scale.ndim == x.ndim - 1 or (scale.ndim == 2 and x.ndim == 2):
+        x = (x - zero) * scale
+    else:
+        x = (x - zero.reshape(-1)) * scale.reshape(-1)
+    return x.astype(dtype)
+
+
+def blocked_nbytes(bc: BlockedCompressed, include_lut: bool = False) -> int:
+    n = bc.payload_nbytes
+    if include_lut:
+        n += int(bc.lut.size)
+    return n
+
+
+def shard_aligned_block_weights(tensor_cols: int, tp_shards: int,
+                                block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                                seq_len: int = DEFAULT_SEQ_LEN) -> int:
+    """Pick a block size so TP shard boundaries coincide with block
+    boundaries: shard_size % block == 0 when possible, else shrink block to
+    gcd alignment (never below seq_len)."""
+    shard = tensor_cols // tp_shards if tp_shards and tensor_cols % tp_shards == 0 else tensor_cols
+    b = min(block_weights, max(seq_len, shard))
+    while shard % b and b > seq_len:
+        b //= 2
+    return max(b - (b % seq_len), seq_len)

@@ -1,0 +1,189 @@
+"""Paper-faithful dictionary codec (Listings 2–4) — host-side numpy.
+
+This is the *reference/validation* codec: byte-exact reimplementation of the
+paper's escape-stream format, used to reproduce Table 1's compression ratios
+and the losslessness claim.  The TPU-parallel format lives in
+``blocked_codec.py`` (see DESIGN.md §2 for why the stream layout changes).
+
+Format (paper Listing 3):
+  stream of uint16; a value < ESCAPE is a codeword for a ``sequence_length``
+  run of uint8 quantized weights; ESCAPE (0xFFFF) is followed by
+  ``sequence_length`` raw weights stored one-per-uint16.  A trailing
+  ESCAPE + remainder handles lengths not divisible by sequence_length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+import numpy as np
+
+ESCAPE = 0xFFFF
+DEFAULT_SEQ_LEN = 4
+MAX_TABLE = ESCAPE  # codewords 0..0xFFFE
+
+
+def find_frequent_sequences(weights_list: list[np.ndarray],
+                            sequence_length: int = DEFAULT_SEQ_LEN,
+                            max_codes: int = MAX_TABLE,
+                            min_count: int = 2,
+                            sample_cap: int | None = 50_000_000) -> dict:
+    """Paper Listing 2: frequency table over length-``sequence_length``
+    subsequences of the flattened quantized weights.
+
+    Returns {tuple(seq) -> codeword}, codewords dense in [0, n_codes).
+    """
+    counter: Counter = Counter()
+    budget = sample_cap if sample_cap is not None else float("inf")
+    for w in weights_list:
+        flat = np.ascontiguousarray(w).reshape(-1).astype(np.uint8)
+        n = (len(flat) // sequence_length) * sequence_length
+        if n == 0:
+            continue
+        grams = flat[:n].reshape(-1, sequence_length)
+        if len(grams) > budget:
+            grams = grams[: int(budget)]
+        budget -= len(grams)
+        # view as void for fast unique
+        u, c = np.unique(grams, axis=0, return_counts=True)
+        for row, cnt in zip(u, c):
+            counter[tuple(int(v) for v in row)] += int(cnt)
+        if budget <= 0:
+            break
+    most = [(seq, cnt) for seq, cnt in counter.most_common(max_codes)
+            if cnt >= min_count]
+    return {seq: i for i, (seq, _) in enumerate(most)}
+
+
+def compress_array(weights: np.ndarray, table: dict,
+                   sequence_length: int = DEFAULT_SEQ_LEN) -> np.ndarray:
+    """Paper Listing 3, vectorized but format-identical.
+
+    Produces the exact uint16 stream the paper's serial loop produces.
+    """
+    flat = np.ascontiguousarray(weights).reshape(-1).astype(np.uint8)
+    n_full = len(flat) // sequence_length
+    head = flat[: n_full * sequence_length].reshape(-1, sequence_length)
+    tail = flat[n_full * sequence_length:]
+
+    # Vectorized lookup: pack grams to a single uint32 key.
+    if sequence_length == 4:
+        keys = head.astype(np.uint32)
+        packed = (keys[:, 0] << 24) | (keys[:, 1] << 16) | (keys[:, 2] << 8) | keys[:, 3]
+        lut = {}
+        for seq, code in table.items():
+            k = (seq[0] << 24) | (seq[1] << 16) | (seq[2] << 8) | seq[3]
+            lut[k] = code
+        codes = np.array([lut.get(int(k), -1) for k in packed], dtype=np.int64)
+    else:
+        codes = np.array([table.get(tuple(int(v) for v in row), -1)
+                          for row in head], dtype=np.int64)
+
+    out: list[int] = []
+    hit = codes >= 0
+    # Serial emission to match the paper's stream exactly (escape layout).
+    for i in range(len(head)):
+        if hit[i]:
+            out.append(int(codes[i]))
+        else:
+            out.append(ESCAPE)
+            out.extend(int(v) for v in head[i])
+    if tail.size > 0:
+        out.append(ESCAPE)
+        out.extend(int(v) for v in tail)
+    return np.asarray(out, dtype=np.uint16)
+
+
+def decompress_array(stream: np.ndarray, table: dict, orig_len: int,
+                     sequence_length: int = DEFAULT_SEQ_LEN) -> np.ndarray:
+    """Paper Listing 4."""
+    inv = {code: np.asarray(seq, dtype=np.uint8) for seq, code in table.items()}
+    out = np.empty(orig_len + sequence_length, dtype=np.uint8)
+    pos = 0
+    i = 0
+    n = len(stream)
+    while i < n:
+        cw = int(stream[i]); i += 1
+        if cw == ESCAPE:
+            remaining = min(sequence_length, orig_len - pos, n - i)
+            out[pos:pos + remaining] = stream[i:i + remaining].astype(np.uint8)
+            pos += remaining
+            i += remaining
+        else:
+            seq = inv[cw]
+            out[pos:pos + sequence_length] = seq
+            pos += sequence_length
+    return out[:orig_len]
+
+
+@dataclasses.dataclass
+class CompressedStream:
+    """One tensor compressed in the paper's stream format."""
+
+    stream: np.ndarray        # uint16
+    orig_len: int
+    shape: tuple
+    sequence_length: int = DEFAULT_SEQ_LEN
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.stream.nbytes)
+
+
+def compress_model_arrays(arrays: dict[str, np.ndarray],
+                          sequence_length: int = DEFAULT_SEQ_LEN,
+                          table: dict | None = None,
+                          max_codes: int = MAX_TABLE):
+    """Paper's ``compress_model`` over a {name: uint8 array} dict.
+
+    Returns (table, {name: CompressedStream}).  One table for the whole
+    model, as in the paper.
+    """
+    if table is None:
+        table = find_frequent_sequences(list(arrays.values()),
+                                        sequence_length, max_codes)
+    out = {}
+    for name, arr in arrays.items():
+        stream = compress_array(arr, table, sequence_length)
+        out[name] = CompressedStream(stream, arr.size, arr.shape,
+                                     sequence_length)
+    return table, out
+
+
+def decompress_model_arrays(table: dict,
+                            streams: dict[str, "CompressedStream"]):
+    out = {}
+    for name, cs in streams.items():
+        flat = decompress_array(cs.stream, table, cs.orig_len,
+                                cs.sequence_length)
+        out[name] = flat.reshape(cs.shape)
+    return out
+
+
+def table_nbytes(table: dict, sequence_length: int = DEFAULT_SEQ_LEN) -> int:
+    """Bytes to ship the decode LUT (counted against the compressed size,
+    as the paper's on-disk format must include it)."""
+    return len(table) * sequence_length
+
+
+def compression_ratio(arrays: dict[str, np.ndarray],
+                      streams: dict[str, CompressedStream],
+                      table: dict,
+                      original_bytes_per_weight: int = 2) -> dict:
+    """Table-1-style accounting.
+
+    original: fp16/bf16 model bytes; quantized: 1 byte/weight; compressed:
+    escape-stream bytes + LUT.
+    """
+    n_weights = sum(a.size for a in arrays.values())
+    original = n_weights * original_bytes_per_weight
+    quantized = n_weights
+    compressed = sum(s.nbytes for s in streams.values()) + table_nbytes(table)
+    return {
+        "n_weights": int(n_weights),
+        "original_bytes": int(original),
+        "quantized_bytes": int(quantized),
+        "compressed_bytes": int(compressed),
+        "ratio_vs_original": original / max(compressed, 1),
+        "ratio_vs_quantized": quantized / max(compressed, 1),
+    }

@@ -1,0 +1,384 @@
+"""Compressed parameter containers — how models carry Tiny-QMoE weights.
+
+A linear weight in ``mode='compressed'`` serving is stored as a
+:class:`PackedLinear`: blocked-codec planes (codes/literals/nlit) plus the
+quantizer's per-channel (scale, zero).  The decode LUT is *shared* across the
+whole model (one dictionary per model, as in the paper) and passed alongside
+the params, so stacking layers for ``lax.scan`` never duplicates it.
+
+Three weight modes, matching the paper's evaluation triple:
+  dense      — bf16 weights (paper's uncompressed row)
+  quant      — int8 payload + scale/zero (paper's "Quantized" row)
+  compressed — PackedLinear (paper's "Compressed" row)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocked_codec as bcdc
+from .blocked_codec import BlockedCompressed, DEFAULT_BLOCK_WEIGHTS
+from .codec import DEFAULT_SEQ_LEN
+from .quant import QuantConfig, quantize
+
+WeightMode = str  # 'dense' | 'quant' | 'compressed'
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QuantLinear:
+    """int8 weight + per-channel affine params (mode='quant')."""
+
+    values: jax.Array   # uint8[out, in] (or [L, out, in] stacked)
+    scale: jax.Array    # f32[out, 1]
+    zero: jax.Array     # f32[out, 1]
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return (((ga("values"), self.values), (ga("scale"), self.scale),
+                 (ga("zero"), self.zero)), ())
+
+    def tree_flatten(self):
+        return (self.values, self.scale, self.zero), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def materialize(self, dtype=jnp.bfloat16) -> jax.Array:
+        return ((self.values.astype(jnp.float32) - self.zero) * self.scale
+                ).astype(dtype)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class PackedLinear:
+    """Blocked-compressed int8 weight + quantizer params (mode='compressed').
+
+    Shapes (single layer):
+      codes    uint16[nb, slots]
+      literals uint8 [nb, cap, S]
+      nlit     int32 [nb]
+      scale    f32   [out, 1]
+      zero     f32   [out, 1]
+    Stacked layer variants carry a leading L dim on every plane.
+
+    Registered *with keys* so partition rules see ".../w_gate/codes" paths —
+    plain node registration loses the names and every plane silently
+    replicates (51 GiB/dev of codes at llama3-405b; §Perf iteration 4).
+    """
+
+    codes: jax.Array
+    literals: jax.Array
+    nlit: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    shape: tuple          # static (out, in) of the dense weight
+    seq_len: int = DEFAULT_SEQ_LEN
+    # consumer contracts the model-sharded dim (wo/w_down): the decoded
+    # dense weight must reshard (u8 bytes) instead of the activations
+    # (§Perf P2); set from the partition rule table at build/spec time.
+    row_parallel: bool = False
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return (((ga("codes"), self.codes), (ga("literals"), self.literals),
+                 (ga("nlit"), self.nlit), (ga("scale"), self.scale),
+                 (ga("zero"), self.zero)),
+                (self.shape, self.seq_len, self.row_parallel))
+
+    def tree_flatten(self):
+        return ((self.codes, self.literals, self.nlit, self.scale, self.zero),
+                (self.shape, self.seq_len, self.row_parallel))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, literals, nlit, scale, zero = children
+        shape, seq_len, row_parallel = aux
+        return cls(codes, literals, nlit, scale, zero, shape, seq_len,
+                   row_parallel)
+
+    @property
+    def payload_nbytes(self) -> int:
+        return int(self.codes.size * 2 + self.literals.size + self.nlit.size * 4)
+
+    def degather(self) -> "PackedLinear":
+        """Reshard planes to model-axis-only before decoding.
+
+        FSDP-stored planes shard (data×model); without this, SPMD decodes
+        locally and then all-gathers the DEQUANTIZED f32 dense weight over
+        the data axis — 3.25 GiB/layer on llama3-405b decode, 410 GiB/step
+        (§Perf D1).  Constraining the planes first moves the gather onto
+        the compressed u16/u8 bytes (~7× fewer, and it IS the paper's
+        point: ship compressed bytes, decode close to compute).
+        """
+        from repro.sharding.partition import constrain
+
+        def on_block_axis(x, rank):
+            # keep the pod dim in the plane sharding: the degather then
+            # spans only the in-pod data axis (ICI), never the cross-pod
+            # DCN links — each pod decodes its row range and the small
+            # activation combine crosses pods instead (§Perf D1b).
+            lead = x.ndim - rank
+            return constrain(x, *([None] * lead), ("pod", "model"),
+                             *([None] * (rank - 1)))
+
+        return PackedLinear(
+            codes=on_block_axis(self.codes, 2),
+            literals=on_block_axis(self.literals, 3),
+            nlit=on_block_axis(self.nlit, 1),
+            scale=self.scale, zero=self.zero,
+            shape=self.shape, seq_len=self.seq_len,
+            row_parallel=self.row_parallel)
+
+    def materialize_int8(self, lut: jax.Array) -> jax.Array:
+        """Decode only (uint8 codes of the quantized weight).  Handles
+        arbitrary leading (stacked layer/expert) dims: blocks decode
+        independently, so (..., nb, slots) reshapes to (-1, slots)."""
+        self = self.degather()
+        lead = self.codes.shape[:-2]
+        nb, slots = self.codes.shape[-2:]
+        cap = self.literals.shape[-2]
+        n_dense = int(np.prod(self.shape))
+        codes = self.codes.reshape(-1, slots)
+        lits = self.literals.reshape(-1, cap, self.seq_len)
+        nlit = self.nlit.reshape(-1)
+        bc = BlockedCompressed(codes, lits, nlit, lut,
+                               orig_len=codes.shape[0] * slots * self.seq_len,
+                               shape=(), seq_len=self.seq_len)
+        flat = bcdc.decode_blocked_jnp(bc)
+        per = nb * slots * self.seq_len
+        flat = flat.reshape((-1, per))[:, :n_dense]
+        return flat.reshape(lead + tuple(self.shape))
+
+    def materialize(self, lut: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+        """Decode + dequantize to the dense weight (any leading dims)."""
+        w = self.materialize_int8(lut).astype(jnp.float32)
+        return ((w - self.zero) * self.scale).astype(dtype)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class TiledPackedLinear:
+    """2D-sharded compressed weight: column tiles on the data axis.
+
+    The plain PackedLinear FSDPs its block axis across (data×model) and
+    must gather the planes on every use — at decode that streams the whole
+    compressed model over ICI per token (§Perf D1/D2).  Here the dense
+    (out, in) weight is split into ``tiles`` column groups; each tile is
+    encoded separately, the tile axis shards on (pod, data) and the block
+    axis on model, so every device permanently owns a (out/model ×
+    in/data) compressed tile: NO weight collective at use time.  The
+    matmul contracts x's feature dim against the data axis (activation
+    reshard, ~MB) — classic 2D tensor parallelism, applied to the paper's
+    compressed format.
+
+    Plane names carry a ``_t`` suffix so partition rules can tell tiled
+    planes from stacked-expert PackedLinear planes of equal rank.
+
+    Shapes (single layer):
+      codes_t    uint16[tiles, nb, slots]
+      literals_t uint8 [tiles, nb, cap, S]
+      nlit_t     int32 [tiles, nb]
+      scale/zero f32   [out, 1]
+    """
+
+    codes: jax.Array
+    literals: jax.Array
+    nlit: jax.Array
+    scale: jax.Array
+    zero: jax.Array
+    shape: tuple          # static (out, in) of the dense weight
+    seq_len: int = DEFAULT_SEQ_LEN
+
+    def tree_flatten_with_keys(self):
+        ga = jax.tree_util.GetAttrKey
+        return (((ga("codes_t"), self.codes),
+                 (ga("literals_t"), self.literals),
+                 (ga("nlit_t"), self.nlit), (ga("scale"), self.scale),
+                 (ga("zero"), self.zero)), (self.shape, self.seq_len))
+
+    def tree_flatten(self):
+        return ((self.codes, self.literals, self.nlit, self.scale,
+                 self.zero), (self.shape, self.seq_len))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, literals, nlit, scale, zero = children
+        shape, seq_len = aux
+        return cls(codes, literals, nlit, scale, zero, shape, seq_len)
+
+    @property
+    def tiles(self) -> int:
+        return self.codes.shape[-3]
+
+    @property
+    def payload_nbytes(self) -> int:
+        return int(self.codes.size * 2 + self.literals.size +
+                   self.nlit.size * 4)
+
+    def materialize_int8(self, lut: jax.Array) -> jax.Array:
+        """Decode every tile locally → dense (..., out, in) uint8 whose in
+        dim is tile-sharded (no plane collectives)."""
+        lead = self.codes.shape[:-3]
+        tiles, nb, slots = self.codes.shape[-3:]
+        cap = self.literals.shape[-2]
+        out, in_full = self.shape
+        in_t = in_full // tiles
+        codes = self.codes.reshape(-1, slots)
+        lits = self.literals.reshape(-1, cap, self.seq_len)
+        nlit = self.nlit.reshape(-1)
+        bc = BlockedCompressed(codes, lits, nlit, lut,
+                               orig_len=codes.shape[0] * slots * self.seq_len,
+                               shape=(), seq_len=self.seq_len)
+        flat = bcdc.decode_blocked_jnp(bc)
+        per_tile = nb * slots * self.seq_len
+        flat = flat.reshape((-1, tiles, per_tile))[..., : out * in_t]
+        w = flat.reshape(lead + (tiles, out, in_t))
+        w = jnp.moveaxis(w, -3, -2)                      # (..., out, tiles, in_t)
+        return w.reshape(lead + (out, in_full))
+
+    def materialize(self, lut: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+        w = self.materialize_int8(lut).astype(jnp.float32)
+        return ((w - self.zero) * self.scale).astype(dtype)
+
+
+def pack_linear_tiled(w: jax.Array, table: dict, lut: np.ndarray,
+                      tiles: int, qcfg: QuantConfig | None = None,
+                      block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                      lit_cap: int | None = None) -> TiledPackedLinear:
+    """Quantize + encode each column tile separately (host side)."""
+    out, in_full = w.shape
+    assert in_full % tiles == 0, (w.shape, tiles)
+    in_t = in_full // tiles
+    ql = quantize_linear(w, qcfg)
+    vals = np.asarray(ql.values, dtype=np.uint8)
+    bw = min(block_weights, ((out * in_t) // DEFAULT_SEQ_LEN)
+             * DEFAULT_SEQ_LEN) or DEFAULT_SEQ_LEN
+    bcs = [bcdc.encode_blocked(
+        np.ascontiguousarray(vals[:, t * in_t:(t + 1) * in_t]), table,
+        lut=lut, block_weights=bw) for t in range(tiles)]
+    cap = lit_cap if lit_cap is not None else max(
+        bc.literals.shape[1] for bc in bcs)
+
+    def padlit(bc):
+        cur = bc.literals.shape[1]
+        if cur > cap:
+            raise ValueError(f"lit_cap {cap} < needed {cur}")
+        if cur == cap:
+            return bc.literals
+        pad = jnp.zeros((bc.literals.shape[0], cap - cur,
+                         bc.literals.shape[2]), jnp.uint8)
+        return jnp.concatenate([bc.literals, pad], axis=1)
+
+    return TiledPackedLinear(
+        codes=jnp.stack([bc.codes for bc in bcs]),
+        literals=jnp.stack([padlit(bc) for bc in bcs]),
+        nlit=jnp.stack([bc.nlit for bc in bcs]),
+        scale=ql.scale, zero=ql.zero,
+        shape=tuple(w.shape), seq_len=DEFAULT_SEQ_LEN)
+
+
+def planned_tiled_specs(shape: tuple, tiles: int, *, stacked: tuple = (),
+                        block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                        seq_len: int = DEFAULT_SEQ_LEN,
+                        lit_cap_frac: float = 0.25) -> TiledPackedLinear:
+    """ShapeDtypeStruct stand-in for a TiledPackedLinear."""
+    out, in_full = shape
+    in_t = in_full // tiles
+    n = out * in_t
+    bw = min(block_weights, (n // seq_len) * seq_len) or seq_len
+    nb = -(-n // bw)
+    slots = bw // seq_len
+    cap = max(1, int(slots * lit_cap_frac))
+    sds = jax.ShapeDtypeStruct
+    return TiledPackedLinear(
+        codes=sds(stacked + (tiles, nb, slots), jnp.uint16),
+        literals=sds(stacked + (tiles, nb, cap, seq_len), jnp.uint8),
+        nlit=sds(stacked + (tiles, nb), jnp.int32),
+        scale=sds(stacked + (out, 1), jnp.float32),
+        zero=sds(stacked + (out, 1), jnp.float32),
+        shape=tuple(shape), seq_len=seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Host-side packing of real weights.
+# ---------------------------------------------------------------------------
+
+def quantize_linear(w: jax.Array, qcfg: QuantConfig | None = None) -> QuantLinear:
+    """Quantize a (out, in) weight to the QuantLinear container."""
+    qcfg = qcfg or QuantConfig(bits=8, granularity="per_channel")
+    qt = quantize(jnp.asarray(w), qcfg)
+    values = qt.values.reshape(w.shape)  # per_channel rows == w rows
+    return QuantLinear(values=values.astype(jnp.uint8),
+                       scale=qt.scale, zero=qt.zero)
+
+
+def pack_linear(w: jax.Array, table: dict, lut: np.ndarray,
+                qcfg: QuantConfig | None = None,
+                block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                lit_cap: int | None = None) -> PackedLinear:
+    """Quantize + blocked-compress a dense weight (host side).
+
+    ``lit_cap`` forces a uniform literal capacity (needed when stacking
+    layers); pass None to use the tensor's own max.
+    """
+    ql = quantize_linear(w, qcfg)
+    bc = bcdc.encode_blocked(np.asarray(ql.values), table,
+                             lut=lut, block_weights=block_weights)
+    literals = bc.literals
+    if lit_cap is not None:
+        cur = literals.shape[1]
+        if cur < lit_cap:
+            pad = jnp.zeros((literals.shape[0], lit_cap - cur,
+                             literals.shape[2]), jnp.uint8)
+            literals = jnp.concatenate([literals, pad], axis=1)
+        elif cur > lit_cap:
+            raise ValueError(f"lit_cap {lit_cap} < needed {cur}")
+    return PackedLinear(codes=bc.codes, literals=literals, nlit=bc.nlit,
+                        scale=ql.scale, zero=ql.zero, shape=tuple(w.shape),
+                        seq_len=bc.seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run shape planning (no data, deterministic shapes).
+# ---------------------------------------------------------------------------
+
+def planned_packed_specs(shape: tuple, *, stacked: tuple = (),
+                         block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                         seq_len: int = DEFAULT_SEQ_LEN,
+                         lit_cap_frac: float = 0.25) -> PackedLinear:
+    """ShapeDtypeStruct stand-in for a PackedLinear of a given dense shape.
+
+    ``lit_cap_frac`` is the planned escape rate (fraction of slots carrying
+    literals); 0.25 is the measured rate on 8-bit quantized transformer
+    weights with a 64k dictionary (see benchmarks/compression.py).
+    """
+    n = int(np.prod(shape))
+    nb = -(-n // block_weights)
+    slots = block_weights // seq_len
+    cap = max(1, int(slots * lit_cap_frac))
+    sds = jax.ShapeDtypeStruct
+    out = shape[0]
+    return PackedLinear(
+        codes=sds(stacked + (nb, slots), jnp.uint16),
+        literals=sds(stacked + (nb, cap, seq_len), jnp.uint8),
+        nlit=sds(stacked + (nb,), jnp.int32),
+        scale=sds(stacked + (out, 1), jnp.float32),
+        zero=sds(stacked + (out, 1), jnp.float32),
+        shape=tuple(shape), seq_len=seq_len)
+
+
+def planned_quant_specs(shape: tuple, *, stacked: tuple = ()) -> QuantLinear:
+    sds = jax.ShapeDtypeStruct
+    return QuantLinear(
+        values=sds(stacked + tuple(shape), jnp.uint8),
+        scale=sds(stacked + (shape[0], 1), jnp.float32),
+        zero=sds(stacked + (shape[0], 1), jnp.float32))
+
+
+def lut_spec(n_codes: int = 65536, seq_len: int = DEFAULT_SEQ_LEN):
+    return jax.ShapeDtypeStruct((n_codes, seq_len), jnp.uint8)

@@ -1,0 +1,69 @@
+"""LZW baseline — the dictionary-compression family the paper cites (§2.2).
+
+The paper describes its schema as "LZW-based"; its actual format (Listings
+2–4) is a static-dictionary variant.  We implement true LZW here as the
+baseline benchmark the paper's §2.2 narrative implies, so the compression
+table in ``benchmarks/compression.py`` can report paper-codec vs LZW vs
+blocked-codec side by side.
+
+Host-side, operates on uint8 arrays, 16-bit code cap (dictionary frozen when
+full — standard practice for fixed-width LZW).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MAX_CODE = 0xFFFF  # 16-bit codes
+
+
+def lzw_encode(data: np.ndarray) -> np.ndarray:
+    """Classic LZW over bytes → uint16 code stream."""
+    flat = np.ascontiguousarray(data).reshape(-1).astype(np.uint8).tobytes()
+    table: dict[bytes, int] = {bytes([i]): i for i in range(256)}
+    next_code = 256
+    out: list[int] = []
+    w = b""
+    for ch in flat:
+        c = bytes([ch])
+        wc = w + c
+        if wc in table:
+            w = wc
+        else:
+            out.append(table[w])
+            if next_code <= MAX_CODE:
+                table[wc] = next_code
+                next_code += 1
+            w = c
+    if w:
+        out.append(table[w])
+    return np.asarray(out, dtype=np.uint16)
+
+
+def lzw_decode(codes: np.ndarray, orig_len: int) -> np.ndarray:
+    """Inverse of :func:`lzw_encode`."""
+    table: dict[int, bytes] = {i: bytes([i]) for i in range(256)}
+    next_code = 256
+    stream = codes.tolist()
+    if not stream:
+        return np.zeros(0, np.uint8)
+    w = table[stream[0]]
+    out = bytearray(w)
+    for code in stream[1:]:
+        if code in table:
+            entry = table[code]
+        elif code == next_code:  # KwKwK case
+            entry = w + w[:1]
+        else:
+            raise ValueError(f"bad LZW code {code}")
+        out.extend(entry)
+        if next_code <= MAX_CODE:
+            table[next_code] = w + entry[:1]
+            next_code += 1
+        w = entry
+    return np.frombuffer(bytes(out[:orig_len]), dtype=np.uint8).copy()
+
+
+def lzw_ratio(data: np.ndarray) -> float:
+    """bytes-in / bytes-out for the 16-bit LZW stream."""
+    enc = lzw_encode(data)
+    return data.size / max(enc.nbytes, 1)

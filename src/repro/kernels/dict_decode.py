@@ -1,0 +1,69 @@
+"""Blocked dictionary-decode Pallas TPU kernel.
+
+The paper decompresses "layer by layer" on CPU; the TPU-native version
+decodes *per VMEM tile* so decompression overlaps the surrounding matmuls
+(DESIGN.md §2).  The decode LUT stays resident in VMEM for every grid step
+(≤ 64k codes × 4 B = 256 KiB), codes/literals stream through per block-chunk.
+
+One grid step decodes ``chunk`` blocks: a LUT row-gather for dictionary
+slots, plus a rank-gather (in-block cumsum over escape flags) for literal
+slots — both fully vectorized; no serial stream walk remains.
+
+Mosaic note: the row-gathers lower to ``dynamic_gather`` on the sublane
+axis; on very old toolchains without gather support ``ops.py`` falls back to
+the jnp oracle (same math, XLA gathers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.codec import ESCAPE
+
+DEFAULT_CHUNK = 8
+
+
+def _kernel(codes_ref, lit_ref, lut_ref, o_ref):
+    codes = codes_ref[...].astype(jnp.int32)            # (cb, slots)
+    is_esc = codes == ESCAPE
+    safe = jnp.where(is_esc, 0, codes)
+    from_dict = jnp.take(lut_ref[...], safe, axis=0)    # (cb, slots, S)
+    rank = jnp.clip(jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1,
+                    0, lit_ref.shape[1] - 1)            # (cb, slots)
+    lit = lit_ref[...]                                  # (cb, cap, S)
+    from_lit = jnp.take_along_axis(
+        lit, rank[:, :, None].astype(jnp.int32), axis=1)  # (cb, slots, S)
+    out = jnp.where(is_esc[:, :, None], from_lit, from_dict)
+    o_ref[...] = out.reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def dict_decode(codes: jax.Array, literals: jax.Array, nlit: jax.Array,
+                lut: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False) -> jax.Array:
+    """Decode (nb, slots) uint16 codes → (nb, slots·S) uint8 weights.
+
+    ``nlit`` is carried for format completeness (the rank-gather clips past
+    it harmlessly: rank rows beyond nlit are never selected because their
+    slots are non-escape).
+    """
+    nb, slots = codes.shape
+    cap, s = literals.shape[1], literals.shape[2]
+    chunk = min(chunk, nb)
+    assert nb % chunk == 0, (nb, chunk)
+    grid = (nb // chunk,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, slots), lambda b: (b, 0)),
+            pl.BlockSpec((chunk, cap, s), lambda b: (b, 0, 0)),
+            pl.BlockSpec(lut.shape, lambda b: (0, 0)),   # LUT resident
+        ],
+        out_specs=pl.BlockSpec((chunk, slots * s), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, slots * s), jnp.uint8),
+        interpret=interpret,
+    )(codes, literals, lut)

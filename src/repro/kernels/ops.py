@@ -1,0 +1,152 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * TPU backend       → Pallas kernel (compiled).
+  * CPU/GPU backend   → pure-jnp oracle (``ref.py``) — same semantics; this
+    preserves the paper's run-anywhere property.  Tests force
+    ``impl='pallas_interpret'`` to validate the kernel bodies on CPU.
+
+All wrappers pad to tile multiples and slice back, so callers never care
+about block alignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from . import dequant_matmul as _dqmm
+from . import dict_decode as _dd
+from . import flash_attention as _fa
+
+Impl = str  # 'auto' | 'ref' | 'pallas' | 'pallas_interpret'
+
+
+def _use_pallas(impl: Impl) -> tuple[bool, bool]:
+    """-> (use_kernel, interpret)"""
+    if impl == "ref":
+        return False, False
+    if impl == "pallas":
+        return True, False
+    if impl == "pallas_interpret":
+        return True, True
+    # auto
+    if jax.default_backend() == "tpu":
+        return True, False
+    return False, False
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), size
+
+
+def dequant_matmul(x, wq, scale, zero, *, out_dtype=jnp.float32,
+                   impl: Impl = "auto", bm=None, bn=None, bk=None):
+    """y = x @ dequant(wq).T with per-channel affine (scale, zero).
+
+    x: (..., K) float; wq: (N, K) uint8; scale/zero: (N, 1).
+    Leading dims of x are flattened to M.
+    """
+    use_kernel, interpret = _use_pallas(impl)
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    x2 = x.reshape(-1, kdim)
+    if not use_kernel:
+        y = ref.dequant_matmul(x2, wq, scale, zero, out_dtype)
+        return y.reshape(*lead, wq.shape[0])
+    kw = {}
+    if bm: kw["bm"] = bm
+    if bn: kw["bn"] = bn
+    if bk: kw["bk"] = bk
+    bm_ = kw.get("bm", _dqmm.DEFAULT_BM)
+    bn_ = kw.get("bn", _dqmm.DEFAULT_BN)
+    bk_ = kw.get("bk", _dqmm.DEFAULT_BK)
+    x2, m0 = _pad_to(x2, 0, min(bm_, max(x2.shape[0], 1)))
+    x2, _ = _pad_to(x2, 1, min(bk_, kdim))
+    wqp, n0 = _pad_to(wq, 0, min(bn_, wq.shape[0]))
+    wqp, _ = _pad_to(wqp, 1, min(bk_, kdim))
+    sp, _ = _pad_to(scale, 0, min(bn_, scale.shape[0]))
+    zp, _ = _pad_to(zero, 0, min(bn_, zero.shape[0]))
+    y = _dqmm.dequant_matmul(x2, wqp, sp, zp, out_dtype=out_dtype,
+                             interpret=interpret, **kw)
+    return y[:m0, :n0].reshape(*lead, n0)
+
+
+def dict_decode(codes, literals, nlit, lut, *, impl: Impl = "auto",
+                chunk: int | None = None):
+    """(nb, slots) uint16 → (nb, slots·S) uint8."""
+    use_kernel, interpret = _use_pallas(impl)
+    if not use_kernel:
+        return ref.dict_decode(codes, literals, nlit, lut)
+    ch = chunk or _dd.DEFAULT_CHUNK
+    nb = codes.shape[0]
+    ch = min(ch, nb)
+    while nb % ch:
+        ch -= 1
+    return _dd.dict_decode(codes, literals, nlit, lut, chunk=ch,
+                           interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None, q_offset=0,
+                    impl: Impl = "auto", bq=None, bk=None, kv_chunk=None):
+    """(B, Hq, Tq, D) × (B, Hkv, Tk, D) → (B, Hq, Tq, D)."""
+    use_kernel, interpret = _use_pallas(impl)
+    if not use_kernel:
+        kw = {"kv_chunk": kv_chunk} if kv_chunk else {}
+        return ref.flash_attention(q, k, v, causal=causal,
+                                   sm_scale=sm_scale, q_offset=q_offset, **kw)
+    kw = {}
+    if bq: kw["bq"] = bq
+    if bk: kw["bk"] = bk
+    return _fa.flash_attention(q, k, v, causal=causal, sm_scale=sm_scale,
+                               q_offset=q_offset, interpret=interpret, **kw)
+
+
+def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
+                          impl: Impl = "auto"):
+    """Fused paper path: blocked-decode the weight, then dequant-matmul.
+
+    ``packed`` is a repro.core.compressed.PackedLinear (single layer).
+    """
+    from repro.sharding.partition import constrain
+    packed = packed.degather()   # gather compressed bytes, not f32 (§Perf D1)
+    n, kdim = packed.shape
+    wq_flat = dict_decode(packed.codes, packed.literals, packed.nlit, lut,
+                          impl=impl)
+    wq = wq_flat.reshape(-1)[: n * kdim].reshape(n, kdim)
+    if packed.row_parallel:
+        # wo/w_down: contraction dim must carry the model sharding — decode
+        # leaves rows:model; reshard the u8 weight (not the f32
+        # activations, which SPMD otherwise gathers at 4-13 GiB/layer;
+        # §Perf P2), then the dot partial-sums into the standard
+        # row-parallel output all-reduce.
+        wq = constrain(wq, None, "model")
+    return dequant_matmul(x, wq, packed.scale, packed.zero,
+                          out_dtype=out_dtype, impl=impl)
+
+
+def tiled_decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
+                                impl: Impl = "auto"):
+    """2D-TP path (§Perf D2): every device decodes its permanently-resident
+    (out/model × in/data) compressed tile; x reshards its feature dim onto
+    data (MB-scale all-to-all) and the dot's partial sums reduce over data.
+    No weight collectives at all.
+
+    ``packed`` is a repro.core.compressed.TiledPackedLinear.
+    """
+    from repro.sharding.partition import constrain
+    n, kdim = packed.shape
+    w = packed.materialize(lut, dtype=x.dtype)        # (n, kdim), in-sharded
+    w = constrain(w, "model", ("pod", "data"))
+    xs = constrain(x, *([None] * (x.ndim - 1)), ("pod", "data"))
+    y = jnp.einsum("...k,nk->...n", xs, w)
+    return constrain(y.astype(out_dtype),
+                     *([None] * (x.ndim - 1)), "model")

@@ -1,0 +1,165 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These define the semantics; kernels must match them to tolerance
+(bit-exact for dict_decode, allclose for the float kernels).  On CPU
+backends ``ops.py`` dispatches here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.codec import ESCAPE
+
+
+def _shard_bgrtd(x):
+    """(B, G, R, T[, D]) grouped-head layout: batch on data axes; model on
+    the kv-group dim when it divides, else on T — keeps flash score chunks
+    sharded through the GQA reshape (the reshape otherwise drops head
+    sharding and SPMD all-gathers 8 GiB score chunks; §Perf iteration 4).
+    Placement matches layers._attend_full: heads-divisible → heads, else
+    q-time (context parallel, k/v replicated)."""
+    from repro.sharding.partition import _current_axis_sizes, constrain
+    axis_sizes, _ = _current_axis_sizes()
+    msize = axis_sizes.get("model", 1)
+    batch = ("pod", "data")
+    if msize <= 1:
+        return x
+    if x.shape[1] % msize == 0:
+        return constrain(x, batch, "model")
+    if x.shape[1] * x.shape[2] % msize == 0:
+        # (g, r) product split: inexpressible as a PartitionSpec — leave it
+        # to SPMD propagation from q's head sharding through the reshape.
+        return x
+    return constrain(x, batch, None, None, "model")
+
+
+def dequant_matmul(x: jax.Array, wq: jax.Array, scale: jax.Array,
+                   zero: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """y = x @ dequant(wq).T
+
+    x:     (M, K) float
+    wq:    (N, K) uint8 codes
+    scale: (N, 1) f32, zero: (N, 1) f32  (per-output-channel affine)
+    """
+    w = (wq.astype(jnp.float32) - zero) * scale          # (N, K)
+    y = jnp.dot(x.astype(jnp.float32), w.T,
+                preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
+def dict_decode(codes: jax.Array, literals: jax.Array, nlit: jax.Array,
+                lut: jax.Array) -> jax.Array:
+    """Blocked-codec decode: (nb, slots) codes -> (nb, slots*S) uint8.
+
+    Same math as ``repro.core.blocked_codec.decode_blocked_jnp`` but kept
+    here in kernel-matching layout (per-block rows, no flatten/trim).
+    """
+    c = codes.astype(jnp.int32)
+    is_esc = c == ESCAPE
+    safe = jnp.where(is_esc, 0, c)
+    from_dict = lut[safe]                                   # (nb, slots, S)
+    rank = jnp.clip(jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1,
+                    0, literals.shape[1] - 1)
+    from_lit = jax.vmap(lambda lit, r: lit[r])(literals, rank)  # (nb, slots, S)
+    out = jnp.where(is_esc[:, :, None], from_lit, from_dict)
+    return out.reshape(codes.shape[0], -1)
+
+
+def dict_decode_dequant_matmul(x, codes, literals, nlit, lut, scale, zero,
+                               n, k, out_dtype=jnp.float32):
+    """Fused reference: decode -> (N, K) codes -> dequant matmul."""
+    wq = dict_decode(codes, literals, nlit, lut).reshape(-1)[: n * k]
+    return dequant_matmul(x, wq.reshape(n, k), scale, zero, out_dtype)
+
+
+def attention_naive(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, sm_scale: float | None = None,
+                    q_offset: int = 0) -> jax.Array:
+    """Small-shape oracle: materializes full logits. Tests only.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D); Hq % Hkv == 0.
+    ``q_offset`` positions the query block inside the causal mask (decode:
+    Tq=1, q_offset=cache_len-1).
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    dv = v.shape[-1]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, tq, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sm = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kf) * sm
+    if causal:
+        tk = k.shape[2]
+        qpos = jnp.arange(tq) + q_offset
+        kpos = jnp.arange(tk)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bgkv->bgrqv", p, vf)
+    return out.reshape(b, hq, tq, dv).astype(q.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, sm_scale: float | None = None,
+                    q_offset: int = 0, kv_chunk: int = 1024) -> jax.Array:
+    """Chunked online-softmax attention in pure jnp ("jnp-flash").
+
+    Same semantics as :func:`attention_naive` but never materializes the
+    (Tq, Tk) logits — it scans KV in ``kv_chunk`` blocks carrying the
+    running (max, denom, acc).  This is the XLA-path used on non-TPU
+    backends and the memory model the Pallas kernel implements in VMEM;
+    the dry-run's memory analysis therefore reflects flash semantics.
+    GQA is grouped (no KV head repeat materialization).
+    """
+    b, hq, tq, d = q.shape
+    hkv, tk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    rep = hq // hkv
+    sm = sm_scale if sm_scale is not None else 1.0 / (d ** 0.5)
+    if tk <= kv_chunk:
+        return attention_naive(q, k, v, causal, sm_scale, q_offset)
+    n_chunks = -(-tk // kv_chunk)
+    pad = n_chunks * kv_chunk - tk
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    else:
+        kp, vp = k, v
+    ks = kp.reshape(b, hkv, n_chunks, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+    vs = vp.reshape(b, hkv, n_chunks, kv_chunk, dv).transpose(2, 0, 1, 3, 4)
+    qg = _shard_bgrtd(q.reshape(b, hkv, rep, tq, d).astype(jnp.float32))
+    qpos = q_offset + jnp.arange(tq)
+
+    def body(carry, inputs):
+        m_run, l_run, acc = carry
+        idx, kc, vc = inputs                       # (b,hkv,C,d)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, kf) * sm
+        kpos = idx * kv_chunk + jnp.arange(kv_chunk)
+        valid = kpos < tk                          # padding mask
+        if causal:
+            valid = valid[None, :] & (qpos[:, None] >= kpos[None, :])
+        else:
+            valid = jnp.broadcast_to(valid[None, :], (tq, kv_chunk))
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1)                # (b,g,r,q)
+        m_new = jnp.maximum(m_run, m_cur)
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bgrqk,bgkv->bgrqv", p, vf)
+        return (m_new, l_new, acc_new), None
+
+    m0 = _shard_bgrtd(jnp.full((b, hkv, rep, tq), -1e30, jnp.float32))
+    l0 = _shard_bgrtd(jnp.zeros((b, hkv, rep, tq), jnp.float32))
+    a0 = _shard_bgrtd(jnp.zeros((b, hkv, rep, tq, dv), jnp.float32))
+    body = jax.checkpoint(body)
+    (m_f, l_f, acc_f), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), ks, vs))
+    out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(b, hq, tq, dv).astype(q.dtype)

@@ -1,0 +1,4 @@
+"""Launchers: mesh construction, dry-run, train/serve drivers."""
+from .mesh import make_production_mesh, make_mesh, make_host_mesh
+
+__all__ = ["make_production_mesh", "make_mesh", "make_host_mesh"]

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: no `from __future__ import annotations` here — the XLA_FLAGS export
+# above must stay the first executable statement of the module.
+
+"""Multi-pod dry-run — lower + compile every (arch × shape × mesh) cell.
+
+This is the proof that the distribution config is coherent: for each cell
+we build full-size ShapeDtypeStruct stand-ins (zero allocation), jit with
+explicit in/out shardings on the production mesh, ``.lower().compile()``,
+and record ``memory_analysis()`` / ``cost_analysis()`` / the collective
+schedule parsed from the optimized HLO.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape decode_32k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+        --out results/dryrun
+
+The 512-device XLA flag above MUST precede every other import (jax locks
+the device count at first init), which is why it is the first line of the
+file and set nowhere else in the repo.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, ASSIGNED_ARCHS
+from repro.core import CompressionPolicy
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (SHAPES, input_specs, serve_param_specs,
+                                train_state_specs, shape_applicable)
+from repro.serve.engine import make_serve_fns
+from repro.sharding import partition as PT
+from repro.train.optimizer import AdamWConfig
+from repro.train.steps import TrainConfig, make_train_step
+
+# Per-arch training knobs (activation memory / optimizer HBM management).
+GIANT = {"llama3-405b", "kimi-k2-1t-a32b"}
+ACCUM = {"llama3-405b": 64, "kimi-k2-1t-a32b": 32,
+         "qwen2-7b": 2, "qwen3-4b": 2, "deepseek-v2-lite-16b": 4,
+         "seamless-m4t-medium": 4, "mamba2-2.7b": 4, "zamba2-1.2b": 4}
+# int8-moment block: must divide each param's (per-shard) last dim — kimi's
+# kv_lora=512/16 shards to 32.
+QBLOCK = {"kimi-k2-1t-a32b": 32}
+# Chunked CE: never materialize (B, T, V) logits (see steps.chunked_cross_
+# entropy).  512-token chunks keep the transient logits slice ≤ ~2 GiB/dev
+# even at vocab 256k.
+LOGITS_CHUNK = 512
+# serve: FSDP the weights across the data axis for models that exceed
+# HBM×TP alone
+FSDP_SERVE = GIANT
+
+
+def _train_cfgs(arch_id: str) -> TrainConfig:
+    giant = arch_id in GIANT
+    return TrainConfig(
+        optimizer=AdamWConfig(quantized_state=giant,
+                              qblock=QBLOCK.get(arch_id, 256)),
+        accum_steps=ACCUM.get(arch_id, 1),
+        logits_chunk=LOGITS_CHUNK,
+        # bf16 accumulator for 1T-scale: halves the dominant state buffer
+        accum_dtype=(jnp.bfloat16 if giant else jnp.float32),
+    )
+
+
+MOE_LOCAL_DISPATCH = {"deepseek-v2-lite-16b", "kimi-k2-1t-a32b"}
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               mode: str = "compressed", param_dtype=jnp.bfloat16):
+    """Build + lower + compile one cell. Returns (compiled, meta)."""
+    entry = get_config(arch_id)
+    cfg = entry.full
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        return None, {"skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = input_specs(arch_id, shape_name)
+    kind = cell["kind"]
+    if arch_id in MOE_LOCAL_DISPATCH and kind != "train":
+        # shard_map local-routing MoE, SERVE only (§Perf DP3): deepseek
+        # prefill collectives 221→49 GiB, kimi prefill 5168→705 GiB and
+        # HBM 52.4→20.2; at TRAIN the dense expert params would re-gather
+        # over the data axis every layer (kimi 54.7→81.4 GiB, refuted).
+        cfg = dataclasses.replace(cfg, moe_local_dispatch=True)
+
+    with mesh, PT.active_mesh(mesh):
+        if kind == "train":
+            tcfg = _train_cfgs(arch_id)
+            state_specs = train_state_specs(cfg, tcfg.optimizer, param_dtype)
+            sspec = PT.make_train_state_specs(state_specs, mesh,
+                                              PT.ShardingConfig(mode="train"))
+            bspec = PT.make_data_specs(cell["batch"], mesh)
+            step = make_train_step(cfg, tcfg)
+            jf = jax.jit(
+                step,
+                in_shardings=(PT.to_named(sspec, mesh),
+                              PT.to_named(bspec, mesh)),
+                out_shardings=(PT.to_named(sspec, mesh), None),
+                donate_argnums=(0,),
+            )
+            lowered = jf.lower(state_specs, cell["batch"])
+        else:
+            # Giants at DECODE: 2D-tiled compressed storage (§Perf D2) —
+            # weights permanently resident (out/model × in/data), no
+            # use-time weight collectives.  At PREFILL the activations are
+            # large and 2D-TP partial sums cost more than the compressed-
+            # byte gather (measured 8.9 TiB vs 45 GiB; §Perf D2-refuted
+            # branch), so prefill keeps FSDP planes + D1 degather.
+            tiles = 16 if (arch_id in FSDP_SERVE and mode == "compressed"
+                           and kind == "decode") else 0
+            policy = CompressionPolicy(mode=mode, tiles=tiles)
+            pspecs, lut = serve_param_specs(cfg, policy, param_dtype)
+            # NOTE(§Perf, refuted): pod_in_fsdp=False (weights replicated
+            # across pods) raised kimi/llama multi-pod prefill HBM by
+            # 2-4%, so pod-extended FSDP stays on for serve.
+            scfg = PT.ShardingConfig(
+                mode="serve", fsdp_weights=arch_id in FSDP_SERVE)
+            pshard = PT.to_named(PT.make_param_specs(pspecs, mesh, scfg),
+                                 mesh)
+            cshard = PT.to_named(PT.make_cache_specs(cell["caches"], mesh),
+                                 mesh)
+            bshard = PT.to_named(PT.make_data_specs(cell["batch"], mesh),
+                                 mesh)
+            lutshard = (jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
+                        if lut is not None else None)
+            prefill, decode = make_serve_fns(cfg)
+            if kind == "prefill":
+                out_cshard = PT.to_named(
+                    PT.make_cache_specs(cell.get("out_caches",
+                                                 cell["caches"]), mesh), mesh)
+                jf = jax.jit(
+                    prefill,
+                    in_shardings=(pshard, lutshard, bshard, cshard),
+                    out_shardings=(None, out_cshard),
+                    donate_argnums=(3,),
+                )
+                lowered = jf.lower(pspecs, lut, cell["batch"], cell["caches"])
+            else:
+                posshard = jax.NamedSharding(mesh,
+                                             jax.sharding.PartitionSpec())
+                jf = jax.jit(
+                    decode,
+                    in_shardings=(pshard, lutshard, bshard["tokens"],
+                                  cshard, posshard),
+                    out_shardings=(None, cshard),
+                    donate_argnums=(3,),
+                )
+                lowered = jf.lower(pspecs, lut, cell["batch"]["tokens"],
+                                   cell["caches"], cell["pos"])
+        compiled = lowered.compile()
+    return compiled, {"mesh": "multi" if multi_pod else "single",
+                      "kind": kind, "mode": mode}
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             mode: str = "compressed", keep_hlo: bool = False) -> dict:
+    t0 = time.monotonic()
+    rec = {"arch": arch_id, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "mode": mode}
+    try:
+        compiled, meta = lower_cell(arch_id, shape_name,
+                                    multi_pod=multi_pod, mode=mode)
+        if compiled is None:
+            rec.update(ok=True, **meta)
+            rec["wall_s"] = round(time.monotonic() - t0, 1)
+            return rec
+        rec["memory"] = hlo_stats.memory_stats(compiled)
+        rec["cost"] = hlo_stats.cost_stats(compiled)
+        hlo = compiled.as_text()
+        # trip-weighted FLOP/byte model (XLA's cost_analysis counts while
+        # bodies once — ~8000x under for scanned+accumulated training)
+        rec["hlo_cost"] = hlo_stats.hlo_cost(hlo)
+        rec["collectives"] = hlo_stats.collective_stats(hlo).as_dict()
+        rec["hlo_chars"] = len(hlo)
+        rec["ok"] = True
+        if keep_hlo:
+            rec["hlo_text"] = hlo
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.monotonic() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="compressed",
+                    choices=["dense", "quant", "compressed"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                fn = os.path.join(
+                    args.out, f"{arch}__{shape}__{mesh_kind}__{args.mode}.json")
+                if os.path.exists(fn):
+                    with open(fn) as f:
+                        if json.load(f).get("ok"):
+                            print(f"[skip cached] {fn}")
+                            continue
+                rec = run_cell(arch, shape, multi_pod=(mesh_kind == "multi"),
+                               mode=args.mode)
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("OK" if rec.get("ok") else "FAIL") + \
+                    (" (skipped: " + rec["skipped"] + ")"
+                     if "skipped" in rec else "")
+                mem = rec.get("memory", {}).get("total_hbm_bytes", 0)
+                print(f"[{status}] {arch} {shape} {mesh_kind} "
+                      f"hbm/dev={mem/2**30:.2f}GiB wall={rec['wall_s']}s",
+                      flush=True)
+                if not rec.get("ok"):
+                    print(rec.get("error"), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,359 @@
+"""Post-optimization HLO analysis — collective bytes, while-loop awareness.
+
+``collective_stats(compiled.as_text())`` walks every computation, sums the
+operand/result bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops, and multiplies ops living inside
+while-loop bodies by the loop trip count (best-effort parse of the loop
+condition's comparison constant — exact for lax.scan loops, which is the
+only loop source in this codebase).
+
+Link-traffic conversion (ring algorithms, n = shard count) happens in
+``benchmarks/roofline.py``; this module reports raw byte sums per op kind.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast",
+                "ragged-all-to-all")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict                  # kind -> count (trip-weighted)
+    bytes_by_kind: dict        # kind -> result bytes (trip-weighted)
+    operand_bytes_by_kind: dict
+    total_bytes: int
+    while_trips: dict          # body name -> trip count
+
+    def as_dict(self):
+        return {
+            "ops": dict(self.ops),
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "operand_bytes_by_kind": dict(self.operand_bytes_by_kind),
+            "total_bytes": int(self.total_bytes),
+            "while_trips": dict(self.while_trips),
+        }
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # header: `%name (args...) -> type {` — args may contain nested
+        # tuple parens, so only anchor on the name + trailing `-> ... {`
+        m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+        if m and stripped.endswith("{") and "->" in stripped:
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _find_while_trips(comps: dict[str, list[str]]) -> dict[str, int]:
+    """body computation name -> trip count (via condition's compare const).
+
+    lax.scan conditions compile to ``compare(iv, constant(N)), direction=LT``
+    (or constant first).  We take the largest integer constant in the
+    condition computation — exact for scan, conservative otherwise.
+    """
+    # map condition/body names per while op
+    body_cond: list[tuple[str, str]] = []
+    for lines in comps.values():
+        for ln in lines:
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb and mc:
+                    body_cond.append((mb.group(1), mc.group(1)))
+    trips: dict[str, int] = {}
+    for body, cond in body_cond:
+        best = 1
+        for ln in comps.get(cond, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+            # constants may be hoisted as s32[] constants on their own line
+            m2 = re.search(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)", ln)
+            if m2:
+                best = max(best, int(m2.group(1)))
+        trips[body] = best
+    return trips
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    trips = _find_while_trips(comps)
+
+    ops: dict = defaultdict(int)
+    rbytes: dict = defaultdict(int)
+    obytes: dict = defaultdict(int)
+
+    for cname, lines in comps.items():
+        weight = trips.get(cname, 1)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                # match " kind(" or " kind-start(" as the op name after '='
+                m = re.search(
+                    rf"=\s*(.+?)\s{re.escape(kind)}(-start)?\(", ln)
+                if not m:
+                    continue
+                result_type = m.group(1)
+                # operand types appear inside the call parens
+                call = ln[m.end():]
+                rb = _type_bytes(result_type)
+                ob = _type_bytes(call.split("), ")[0] + ")")
+                ops[kind] += weight
+                rbytes[kind] += rb * weight
+                obytes[kind] += ob * weight
+                break
+
+    total = sum(rbytes.values())
+    return CollectiveStats(ops=ops, bytes_by_kind=rbytes,
+                           operand_bytes_by_kind=obytes,
+                           total_bytes=total, while_trips=trips)
+
+
+# ---------------------------------------------------------------------------
+# Trip-weighted FLOP/byte model.
+#
+# ``compiled.cost_analysis()`` counts every while body ONCE — a scanned
+# 126-layer model with 64 accumulation microbatches is undercounted ~8000×.
+# This walks the optimized HLO with a computation-weight map (ENTRY=1, while
+# bodies multiply by their trip count, nested scans multiply through),
+# counts dot FLOPs from operand/result shapes, and models memory traffic as
+# (operands + result) bytes of every top-level op (fusion internals are
+# counted at their call site — XLA reads fusion operands once and writes
+# one result, so this matches the fusion's actual HBM traffic).
+# ---------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\S+(?:\[[0-9,]*\])?\S*)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "after-all", "partition-id", "replica-id",
+    "opt-barrier", "optimization-barrier", "iota", "custom-call",
+}
+
+
+def _parse_defs(lines):
+    """name -> (type_str, op, line) for one computation."""
+    defs = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            defs[m.group(1)] = (m.group(2), m.group(3), ln)
+    return defs
+
+
+def _dims(type_str):
+    m = re.match(r"[a-z0-9]+\[([0-9,]*)\]", type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+def _dot_flops(ln, defs) -> int:
+    """2 · prod(result) · prod(contracting dims of lhs)."""
+    m = _DEF_RE.match(ln)
+    if not m:
+        return 0
+    result_dims = _dims(m.group(2))
+    if result_dims is None:
+        return 0
+    args = ln[ln.index("("):]
+    ops = _OPERAND_RE.findall(args.split(")")[0])
+    if not ops or ops[0] not in defs:
+        return 0
+    lhs_dims = _dims(defs[ops[0]][0])
+    if lhs_dims is None:
+        return 0
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+    contract = 1
+    if mc:
+        for d in mc.group(1).split(","):
+            if d:
+                contract *= lhs_dims[int(d)]
+    n = 1
+    for d in result_dims:
+        n *= d
+    return 2 * n * contract
+
+
+def _computation_weights(comps, trips) -> dict:
+    """ENTRY-reachable weights; while bodies/conds multiply by trip count,
+    composing through nesting.  Fusion/reducer computations get weight 0
+    (their cost is accounted at the call site)."""
+    # map: computation -> list of (callee, kind) edges
+    body_cond: dict[str, tuple[str, str]] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb and mc:
+                    body_cond.setdefault(cname, None)
+    weights = {c: 0.0 for c in comps}
+    entry = None
+    for c in comps:
+        if c.startswith("main") or entry is None:
+            entry = c if c.startswith("main") else entry
+    # ENTRY computation: the one never referenced as body/cond/calls target
+    referenced = set()
+    for lines in comps.values():
+        for ln in lines:
+            for m in re.finditer(r"(?:body|condition|calls|to_apply)=%?([\w\.\-]+)", ln):
+                referenced.add(m.group(1))
+    roots = [c for c in comps if c not in referenced]
+    stack = [(r, 1.0) for r in roots]
+    while stack:
+        cname, w = stack.pop()
+        if w <= weights.get(cname, 0.0) and weights.get(cname, 0.0) > 0:
+            continue
+        weights[cname] = max(weights.get(cname, 0.0), w)
+        for ln in comps.get(cname, ()):
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb:
+                    t = trips.get(mb.group(1), 1)
+                    stack.append((mb.group(1), w * t))
+                    if mc:
+                        stack.append((mc.group(1), w * t))
+    return weights
+
+
+_SLICE_OPS = {"dynamic-slice", "slice"}
+
+
+def _fusion_read_bytes(fusion_ln, operand_types, comps) -> int:
+    """Bytes a fusion actually READS: a parameter consumed only via
+    (dynamic-)slice ops contributes its slice results, not its full size —
+    scanned caches are stacked (L, …) tensors whose per-layer fusions read
+    one layer."""
+    mcalls = re.search(r"calls=%?([\w\.\-]+)", fusion_ln)
+    if not mcalls or mcalls.group(1) not in comps:
+        return sum(operand_types)
+    lines = comps[mcalls.group(1)]
+    # param index -> name, and name -> [consuming (op, result_bytes)]
+    params = {}
+    for ln in lines:
+        mp = re.match(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\S+)\s+parameter\((\d+)\)", ln)
+        if mp:
+            params[int(mp.group(3))] = mp.group(1)
+    total = 0
+    for idx, full_bytes in enumerate(operand_types):
+        pname = params.get(idx)
+        if pname is None:
+            total += full_bytes
+            continue
+        uses = []
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            if re.search(rf"%{re.escape(pname)}\b", ln[m.end() - 1:]):
+                uses.append((m.group(3), _type_bytes(m.group(2))))
+        slice_sum = sum(b for _, b in uses)
+        if uses and all(op in _SLICE_OPS for op, _ in uses) \
+                and slice_sum < full_bytes:
+            total += slice_sum      # big tensor, sliced reads only
+        else:
+            total += full_bytes
+    return total
+
+
+def hlo_cost(hlo_text: str) -> dict:
+    """Trip-weighted {flops, bytes} for the per-device optimized module."""
+    comps = _split_computations(hlo_text)
+    trips = _find_while_trips(comps)
+    weights = _computation_weights(comps, trips)
+
+    flops = 0.0
+    bytes_ = 0.0
+    for cname, lines in comps.items():
+        w = weights.get(cname, 0.0)
+        if w <= 0:
+            continue
+        defs = _parse_defs(lines)
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            op = m.group(3)
+            if op in ("dot", "convolution"):
+                flops += w * _dot_flops(ln, defs)
+            if op in _SKIP_BYTES_OPS:
+                continue
+            rb = _type_bytes(m.group(2))
+            operand_types, big = [], 0
+            args = ln[m.end() - 1:]
+            head = args.split("), ")[0]
+            for om in _OPERAND_RE.findall(head):
+                if om in defs:
+                    b1 = _type_bytes(defs[om][0])
+                    operand_types.append(b1)
+                    big = max(big, b1)
+            if op == "dynamic-update-slice" or "dynamic-update-slice" in m.group(1):
+                # in-place update: the target buffer aliases the result —
+                # real traffic is the updated slice + indices, not 2× the
+                # full cache (XLA prints no aliasing info; subtract the
+                # aliased pair).
+                bytes_ += w * max(rb + sum(operand_types) - 2 * big, 0)
+            elif op == "fusion":
+                bytes_ += w * (rb + _fusion_read_bytes(ln, operand_types,
+                                                       comps))
+            else:
+                bytes_ += w * (rb + sum(operand_types))
+    return {"flops": float(flops), "bytes": float(bytes_),
+            "while_trips": trips}
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    fields = ["argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"]
+    out = {f: int(getattr(ma, f, 0)) for f in fields}
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"] +
+                              out["output_size_in_bytes"] +
+                              out["temp_size_in_bytes"] -
+                              out["alias_size_in_bytes"])
+    return out
+
+
+def cost_stats(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    d = ca if isinstance(ca, dict) else (ca[0] if ca else {})
+    return {k: float(v) for k, v in d.items()
+            if k in ("flops", "bytes accessed", "transcendentals",
+                     "utilization operand 0", "optimal_seconds")}

@@ -1,0 +1,5 @@
+"""Model zoo: every assigned architecture family, Tiny-QMoE aware."""
+from .config import ModelConfig
+from . import layers, ssm, lm, encdec, frontends
+
+__all__ = ["ModelConfig", "layers", "ssm", "lm", "encdec", "frontends"]

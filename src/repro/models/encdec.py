@@ -1,0 +1,149 @@
+"""Encoder-decoder backbone (seamless-m4t family).
+
+Audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S, d) straight to the encoder.  The
+decoder is a standard causal stack with cross-attention; encoder K/V are
+projected once at prefill and cached.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import constrain_batch
+
+from . import layers as L
+from .lm import _stack, _none_caches, scan_or_unroll
+
+Params = dict
+
+
+def init_encdec(key, cfg, dtype=jnp.float32) -> Params:
+    d, v = cfg.d_model, cfg.vocab_size
+    ks = jax.random.split(key, 4 + cfg.encoder_layers + cfg.decoder_layers)
+    enc_blocks = []
+    for i in range(cfg.encoder_layers):
+        kk = jax.random.split(ks[4 + i], 2)
+        enc_blocks.append({
+            "attn_norm": jnp.ones((d,), dtype),
+            "attn": L.init_attention(kk[0], cfg, dtype),
+            "mlp_norm": jnp.ones((d,), dtype),
+            "mlp": L.init_mlp(kk[1], d, cfg.d_ff, dtype),
+        })
+    dec_blocks = []
+    for i in range(cfg.decoder_layers):
+        kk = jax.random.split(ks[4 + cfg.encoder_layers + i], 3)
+        dec_blocks.append({
+            "attn_norm": jnp.ones((d,), dtype),
+            "attn": L.init_attention(kk[0], cfg, dtype),
+            "cross_norm": jnp.ones((d,), dtype),
+            "cross": L.init_attention(kk[1], cfg, dtype),
+            "mlp_norm": jnp.ones((d,), dtype),
+            "mlp": L.init_mlp(kk[2], d, cfg.d_ff, dtype),
+        })
+    return {
+        "dec_embed": jax.random.normal(ks[0], (v, d), dtype) * 0.02,
+        "encoder": _stack(enc_blocks),
+        "decoder": _stack(dec_blocks),
+        "enc_final_norm": jnp.ones((d,), dtype),
+        "dec_final_norm": jnp.ones((d,), dtype),
+        "lm_head": jax.random.normal(ks[1], (v, d), dtype) * 0.02,
+    }
+
+
+def encode(params: Params, cfg, embeds: jax.Array, *, lut=None,
+           impl: str = "auto") -> jax.Array:
+    """Bidirectional encoder over precomputed frame embeddings."""
+
+    def body(x, bp):
+        h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+        a, _ = L.apply_attention(bp["attn"], h, cfg, lut=lut, cache=None,
+                                 pos=None, causal=False, impl=impl)
+        x = x + a
+        h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+        return x + L.apply_mlp(bp["mlp"], h, lut=lut, impl=impl), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = scan_or_unroll(cfg, body, embeds, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def project_enc_kv_all(params: Params, cfg, enc_out: jax.Array, *,
+                       lut=None, impl: str = "auto"):
+    """Cross-attention K/V for every decoder layer, stacked (L, B, S, H, hd)."""
+
+    def body(_, bp):
+        k, v = L.project_enc_kv(bp["cross"], enc_out, cfg, lut=lut, impl=impl)
+        return None, (k, v)
+
+    _, (ks, vs) = scan_or_unroll(cfg, body, None, params["decoder"])
+    return ks, vs
+
+
+def decode_stack(params: Params, cfg, x: jax.Array, enc_k, enc_v, *,
+                 caches=None, pos=None, lut=None, impl: str = "auto"):
+    """Decoder stack: causal self-attn (cached) + cross-attn + FFN."""
+
+    def body(carry, xs):
+        x = carry
+        bp, cache, ek, ev = xs
+        cache = cache if isinstance(cache, dict) else None
+        h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+        a, nc = L.apply_attention(bp["attn"], h, cfg, lut=lut, cache=cache,
+                                  pos=pos, causal=True, impl=impl)
+        x = x + a
+        h = L.rms_norm(x, bp["cross_norm"], cfg.norm_eps)
+        x = x + L.apply_cross_attention(bp["cross"], h, ek, ev, cfg,
+                                        lut=lut, impl=impl)
+        h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+        return x + L.apply_mlp(bp["mlp"], h, lut=lut, impl=impl), nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if caches is None:
+        caches = _none_caches(cfg.decoder_layers)
+    x, new_caches = scan_or_unroll(cfg, body, x,
+                                   (params["decoder"], caches, enc_k, enc_v))
+    return x, new_caches
+
+
+def forward(params: Params, cfg, enc_embeds: jax.Array,
+            dec_tokens: jax.Array, *, caches=None, pos=None, lut=None,
+            impl: str = "auto", return_hidden: bool = False):
+    """Full enc-dec forward (training / prefill): encode then decode.
+
+    Returns (logits, new_caches) where new_caches includes the projected
+    encoder K/V for subsequent decode steps.  ``return_hidden=True`` skips
+    the LM head (chunked-CE training path).
+    """
+    enc_out = encode(params, cfg, enc_embeds, lut=lut, impl=impl)
+    enc_k, enc_v = project_enc_kv_all(params, cfg, enc_out, lut=lut, impl=impl)
+    x = constrain_batch(L.embed(params["dec_embed"], dec_tokens, lut))
+    self_caches = (caches or {}).get("self")
+    x, new_self = decode_stack(params, cfg, x, enc_k, enc_v,
+                               caches=self_caches, pos=pos, lut=lut, impl=impl)
+    x = L.rms_norm(x, params["dec_final_norm"], cfg.norm_eps)
+    new_caches = {"self": new_self, "enc_k": enc_k, "enc_v": enc_v}
+    if return_hidden:
+        return x, new_caches
+    logits = L.linear(x, params["lm_head"], lut, impl=impl)
+    return logits, new_caches
+
+
+def decode_step(params: Params, cfg, token: jax.Array, caches, pos, *,
+                lut=None, impl: str = "auto"):
+    """One decoder step against cached self K/V + encoder K/V."""
+    x = L.embed(params["dec_embed"], token, lut)
+    x, new_self = decode_stack(params, cfg, x, caches["enc_k"],
+                               caches["enc_v"], caches=caches["self"],
+                               pos=pos, lut=lut, impl=impl)
+    x = L.rms_norm(x, params["dec_final_norm"], cfg.norm_eps)
+    logits = L.linear(x, params["lm_head"], lut, impl=impl)
+    return logits, {"self": new_self, "enc_k": caches["enc_k"],
+                    "enc_v": caches["enc_v"]}
+
+
+def init_dec_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return _stack([L.init_kv_cache(cfg, batch, max_len, dtype)
+                   for _ in range(cfg.decoder_layers)])

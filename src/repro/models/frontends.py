@@ -1,0 +1,40 @@
+"""Modality frontend STUBS (per assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer backbone only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+These helpers generate correctly-shaped stand-ins for tests/examples and
+document the real interface a production frontend would implement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def audio_frame_embeddings(key, batch: int, n_frames: int, d_model: int,
+                           dtype=jnp.float32) -> jax.Array:
+    """Stand-in for a conformer/w2v-BERT audio encoder frontend output.
+
+    Real system: 16 kHz waveform → fbank → conv subsampling → (B, S, d).
+    """
+    return jax.random.normal(key, (batch, n_frames, d_model), dtype) * 0.02
+
+
+def vision_patch_embeddings(key, batch: int, n_patches: int, d_model: int,
+                            dtype=jnp.float32) -> jax.Array:
+    """Stand-in for an InternViT patch-embedding + projector output.
+
+    Real system: 448×448 image → ViT → pixel-shuffle → MLP projector →
+    (B, P, d) tokens prepended to the text sequence.
+    """
+    return jax.random.normal(key, (batch, n_patches, d_model), dtype) * 0.02
+
+
+def frontend_spec(kind: str, batch: int, seq: int, n_patches: int,
+                  d_model: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct for dry-run input_specs."""
+    if kind == "audio":
+        return jax.ShapeDtypeStruct((batch, seq, d_model), dtype)
+    if kind == "vision":
+        return jax.ShapeDtypeStruct((batch, n_patches, d_model), dtype)
+    raise ValueError(kind)

@@ -1,0 +1,340 @@
+"""Decoder-only LM assembly — dense / MoE / SSM / hybrid / VLM families.
+
+Layers are stacked (leading L dim on every leaf) and run under ``lax.scan``
+so HLO stays O(1) in depth — required to compile the 126-layer / 61-layer
+giants in the dry-run container (DESIGN.md §6).  Heterogeneous stacks
+(deepseek's first dense layer, zamba2's shared attention insertions) unroll
+the exceptional blocks and scan the homogeneous majority.
+
+All entry points take ``lut`` (the shared dictionary LUT) so compressed
+weights decode in-graph — the paper's decompress-on-demand per layer.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import constrain_batch
+
+from . import layers as L
+from . import ssm as S
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg, kind: str, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if kind == "dense":
+        return {
+            "attn_norm": jnp.ones((d,), dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "mlp_norm": jnp.ones((d,), dtype),
+            "mlp": L.init_mlp(ks[1], d, cfg.d_ff, dtype),
+        }
+    if kind == "moe":
+        attn = (L.init_mla(ks[0], cfg, dtype) if cfg.mla
+                else L.init_attention(ks[0], cfg, dtype))
+        return {
+            "attn_norm": jnp.ones((d,), dtype),
+            "attn": attn,
+            "mlp_norm": jnp.ones((d,), dtype),
+            "moe": L.init_moe(ks[1], cfg, dtype),
+        }
+    if kind == "moe_dense":  # deepseek first layer: MLA attn + dense FFN
+        attn = (L.init_mla(ks[0], cfg, dtype) if cfg.mla
+                else L.init_attention(ks[0], cfg, dtype))
+        ff = cfg.d_ff if cfg.d_ff else cfg.moe_d_ff * (cfg.top_k +
+                                                       cfg.n_shared_experts)
+        return {
+            "attn_norm": jnp.ones((d,), dtype),
+            "attn": attn,
+            "mlp_norm": jnp.ones((d,), dtype),
+            "mlp": L.init_mlp(ks[1], d, ff, dtype),
+        }
+    if kind == "ssm":
+        return {
+            "norm": jnp.ones((d,), dtype),
+            "mamba": S.init_mamba2(ks[0], cfg, dtype),
+        }
+    raise ValueError(kind)
+
+
+def _stack(trees: list):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def scan_or_unroll(cfg, body, init, xs):
+    """lax.scan normally; Python-unrolled when cfg.unroll_stack (roofline
+    probe compiles need per-layer HLO cost visible to cost_analysis)."""
+    if not cfg.unroll_stack:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        carry, y = body(carry, jax.tree_util.tree_map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = (jax.tree_util.tree_map(lambda *z: jnp.stack(z), *ys)
+               if ys and ys[0] is not None else None)
+    return carry, stacked
+
+
+def init_lm(key, cfg, dtype=jnp.float32) -> Params:
+    d, v = cfg.d_model, cfg.vocab_size
+    k_emb, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    params: dict = {
+        "embed": jax.random.normal(k_emb, (v, d), dtype) * 0.02,
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(k_head, (v, d), dtype) * 0.02
+
+    keys = jax.random.split(k_blocks, max(cfg.n_layers, 1))
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio"):
+        params["blocks"] = _stack(
+            [_init_block(keys[i], cfg, "dense", dtype)
+             for i in range(cfg.n_layers)])
+    elif fam == "moe":
+        nd = cfg.first_dense_layers
+        if nd:
+            params["first_blocks"] = [
+                _init_block(keys[i], cfg, "moe_dense", dtype)
+                for i in range(nd)]
+        params["blocks"] = _stack(
+            [_init_block(keys[i], cfg, "moe", dtype)
+             for i in range(nd, cfg.n_layers)])
+    elif fam == "ssm":
+        params["blocks"] = _stack(
+            [_init_block(keys[i], cfg, "ssm", dtype)
+             for i in range(cfg.n_layers)])
+    elif fam == "hybrid":
+        params["blocks"] = _stack(
+            [_init_block(keys[i], cfg, "ssm", dtype)
+             for i in range(cfg.n_layers)])
+        params["shared_attn"] = _init_block(k_shared, cfg, "dense", dtype)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block applications (scan bodies).
+# ---------------------------------------------------------------------------
+
+def _dense_block(bp, x, cfg, lut, cache, pos, impl, causal=True):
+    h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    a, new_cache = L.apply_attention(bp["attn"], h, cfg, lut=lut, cache=cache,
+                                     pos=pos, causal=causal, impl=impl)
+    # Serving: one reshard point per residual — row-parallel outputs arrive
+    # reduce-scattered (T on model); without the pin every consumer
+    # re-gathers x separately in f32 (5×4 GiB/layer at llama prefill;
+    # §Perf P3).  Training keeps free propagation: the pin forces gathers
+    # inside the remat'd backward (internlm2 train 114→165 GiB, refuted).
+    pin = constrain_batch if cache is not None else (lambda z: z)
+    x = pin(x + a)
+    h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    x = pin(x + L.apply_mlp(bp["mlp"], h, lut=lut, impl=impl))
+    return x, new_cache
+
+
+def _moe_block(bp, x, cfg, lut, cache, pos, impl):
+    h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    if cfg.mla:
+        a, new_cache = L.apply_mla(bp["attn"], h, cfg, lut=lut, cache=cache,
+                                   pos=pos, impl=impl)
+    else:
+        a, new_cache = L.apply_attention(bp["attn"], h, cfg, lut=lut,
+                                         cache=cache, pos=pos, impl=impl)
+    x = x + a
+    h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    if "moe" in bp:
+        y, aux = L.apply_moe(bp["moe"], h, cfg, lut=lut, impl=impl)
+    else:
+        y, aux = L.apply_mlp(bp["mlp"], h, lut=lut, impl=impl), 0.0
+    return x + y, new_cache, aux
+
+
+def _ssm_block(bp, x, cfg, lut, cache, impl):
+    h = L.rms_norm(x, bp["norm"], cfg.norm_eps)
+    y, new_cache = S.apply_mamba2(bp["mamba"], h, cfg, lut=lut, cache=cache,
+                                  impl=impl)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack runners.
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, x, cfg, *, lut, caches, pos, impl):
+    """Scan homogeneous stacked blocks; returns (x, new_caches, aux_sum)."""
+    fam = cfg.family
+
+    def body(carry, xs):
+        x, aux = carry
+        bp, cache = xs
+        cache = cache if isinstance(cache, dict) else None  # placeholder xs
+        if fam in ("dense", "vlm", "audio"):
+            x, nc = _dense_block(bp, x, cfg, lut, cache, pos, impl)
+            return (x, aux), nc
+        if fam == "moe":
+            x, nc, a = _moe_block(bp, x, cfg, lut, cache, pos, impl)
+            return (x, aux + a), nc
+        if fam in ("ssm", "hybrid"):
+            x, nc = _ssm_block(bp, x, cfg, lut, cache, impl)
+            return (x, aux), nc
+        raise ValueError(fam)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), new_caches = scan_or_unroll(cfg, body, (x, jnp.float32(0.0)),
+                                          (params, caches))
+    return x, new_caches, aux
+
+
+def _hybrid_segments(cfg):
+    """Zamba2: shared attn applied after every ``attn_period`` mamba blocks.
+
+    Returns list of (start, end) mamba segments; a shared-attn application
+    follows every segment except the last.
+    """
+    per = cfg.attn_period
+    n = cfg.n_layers
+    bounds = list(range(per, n, per))
+    segs, prev = [], 0
+    for b in bounds:
+        segs.append((prev, b))
+        prev = b
+    segs.append((prev, n))
+    return segs
+
+
+def forward(params: Params, cfg, tokens: Optional[jax.Array] = None, *,
+            embeds: Optional[jax.Array] = None, caches=None, pos=None,
+            lut=None, impl: str = "auto", return_hidden: bool = False):
+    """Full forward pass.
+
+    tokens: (B, T) int32 — embedded via the table; embeds: (B, T', d)
+    modality-frontend outputs, prepended when both given (VLM) or used
+    alone (audio).  Returns (logits, new_caches, aux_loss).
+
+    ``return_hidden=True`` skips the LM head and returns the final normed
+    hidden states instead of logits — the chunked-CE training path computes
+    head matmul + softmax per sequence chunk so the (B, T, V) logits tensor
+    never materializes (see train.steps.chunked_cross_entropy).
+    """
+    if tokens is not None:
+        x = L.embed(params["embed"], tokens, lut)
+        if embeds is not None:
+            x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    else:
+        x = embeds
+    # Pin activations to batch sharding right after the vocab gather — SPMD
+    # otherwise inherits the embed table's sharding and replicates (the
+    # "involuntary full rematerialization" warning in the dry-run).
+    x = constrain_batch(x)
+    cfg_dtype = x.dtype
+
+    aux_total = jnp.float32(0.0)
+    new_caches: dict = {}
+    fam = cfg.family
+
+    if fam == "moe" and "first_blocks" in params:
+        fb_caches = (caches or {}).get("first", [None] * len(params["first_blocks"]))
+        ncs = []
+        for bp, c in zip(params["first_blocks"], fb_caches):
+            x, nc, a = _moe_block(bp, x, cfg, lut, c, pos, impl)
+            aux_total = aux_total + a
+            ncs.append(nc)
+        new_caches["first"] = ncs
+
+    if fam == "hybrid":
+        segs = _hybrid_segments(cfg)
+        blk_caches = (caches or {}).get("blocks")
+        attn_caches = (caches or {}).get("attn", [None] * (len(segs) - 1))
+        new_blk, new_attn = [], []
+        for si, (s, e) in enumerate(segs):
+            sub = jax.tree_util.tree_map(lambda a_: a_[s:e], params["blocks"])
+            subc = (jax.tree_util.tree_map(lambda a_: a_[s:e], blk_caches)
+                    if blk_caches is not None else _none_caches(e - s))
+            x, nc, _ = _run_stack(sub, x, cfg, lut=lut, caches=subc,
+                                  pos=pos, impl=impl)
+            new_blk.append(nc)
+            if si < len(segs) - 1:
+                x, nac = _dense_block(params["shared_attn"], x, cfg, lut,
+                                      attn_caches[si], pos, impl)
+                new_attn.append(nac)
+        new_caches["blocks"] = (
+            jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs), *new_blk)
+            if new_blk[0] is not None else None)
+        new_caches["attn"] = new_attn
+    else:
+        blk_caches = (caches or {}).get("blocks")
+        n_stacked = cfg.n_layers - (cfg.first_dense_layers
+                                    if fam == "moe" else 0)
+        if blk_caches is None:
+            blk_caches = _none_caches(n_stacked)
+        x, nc, aux = _run_stack(params["blocks"], x, cfg, lut=lut,
+                                caches=blk_caches, pos=pos, impl=impl)
+        aux_total = aux_total + aux
+        new_caches["blocks"] = nc
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, new_caches, aux_total
+    head = params.get("lm_head", params["embed"])
+    logits = L.linear(x, head, lut, impl=impl)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits, new_caches, aux_total
+
+
+def _none_caches(n: int):
+    """Broadcastable 'no cache' xs for scan: None isn't scannable, so use a
+    zero-size per-layer placeholder."""
+    return jnp.zeros((n, 0), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cache construction.
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    """Stacked per-layer caches for serving."""
+    fam = cfg.family
+
+    def one_attn():
+        if cfg.mla:
+            return L.init_mla_cache(cfg, batch, max_len, dtype)
+        return L.init_kv_cache(cfg, batch, max_len, dtype)
+
+    if fam in ("dense", "vlm", "audio"):
+        return {"blocks": _stack([one_attn() for _ in range(cfg.n_layers)])}
+    if fam == "moe":
+        nd = cfg.first_dense_layers
+        out = {"blocks": _stack([one_attn()
+                                 for _ in range(cfg.n_layers - nd)])}
+        if nd:
+            out["first"] = [one_attn() for _ in range(nd)]
+        return out
+    if fam == "ssm":
+        return {"blocks": _stack([S.init_ssm_cache(cfg, batch)
+                                  for _ in range(cfg.n_layers)])}
+    if fam == "hybrid":
+        segs = _hybrid_segments(cfg)
+        return {
+            "blocks": _stack([S.init_ssm_cache(cfg, batch)
+                              for _ in range(cfg.n_layers)]),
+            "attn": [L.init_kv_cache(cfg, batch, max_len, dtype)
+                     for _ in range(len(segs) - 1)],
+        }
+    raise ValueError(fam)

@@ -1,0 +1,221 @@
+"""Mamba2 / SSD (state-space duality) layers — attention-free backbone.
+
+Implements the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060): within a
+chunk the quadratic "attention" form, across chunks a linear state
+recurrence carried by ``lax.scan`` — O(T) total, constant-size decode state.
+The recurrence parameters (A_log, dt_bias, conv, D) stay dense per the
+compression policy (DESIGN.md §Arch-applicability); the big in/out
+projections carry Tiny-QMoE compression like any other linear.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import linear, rms_norm
+
+
+def init_mamba2(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    g = cfg.ssm_n_groups
+    h = cfg.ssm_heads
+    kw = cfg.ssm_conv
+    conv_dim = di + 2 * g * n
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z(di), x(di), B(g·n), C(g·n), dt(h)]
+    d_in_proj = 2 * di + 2 * g * n + h
+    return {
+        "in_proj": jax.random.normal(k1, (d_in_proj, d), dtype) / math.sqrt(d),
+        "conv_w": jax.random.normal(k2, (conv_dim, kw), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(dtype)),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "d_skip": jnp.ones((h,), dtype),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(k3, (d, di), dtype) / math.sqrt(di),
+    }
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    """Decode state: conv ring buffer + SSM state (constant in T)."""
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    conv_dim = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  xbc: (B, T, C); w: (C, K).
+
+    With ``state`` (B, K-1, C) prepended (decode / chunked prefill),
+    returns (y, new_state).
+    """
+    bsz, t, c = xbc.shape
+    kw = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((bsz, kw - 1, c), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)             # (B, T+K-1, C)
+    # window sum: y[t] = Σ_j x[t+j]·w[:, j]
+    y = jnp.zeros((bsz, t, c), jnp.float32)
+    for j in range(kw):
+        y = y + xp[:, j:j + t].astype(jnp.float32) * w[:, j].astype(jnp.float32)
+    y = y + b.astype(jnp.float32)
+    new_state = xp[:, -(kw - 1):] if kw > 1 else jnp.zeros((bsz, 0, c), xbc.dtype)
+    return jax.nn.silu(y).astype(xbc.dtype), new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = Σ_{j<k<=i} x[..., k]; -inf above diagonal."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b_in: jax.Array,
+                c_in: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x:  (B, T, H, P)   inputs per head
+    dt: (B, T, H)      positive step sizes (softplus applied by caller)
+    a:  (H,)           negative decay rates
+    b_in, c_in: (B, T, G, N) with H % G == 0
+    Returns (y: (B, T, H, P), final_state: (B, H, P, N)).
+    """
+    bsz, t, h, p = x.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    rep = h // g
+    nchunks = -(-t // chunk)
+    pad = nchunks * chunk - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    tt = nchunks * chunk
+
+    # head-grouped views (expand G -> H lazily via reshape of einsum inputs)
+    bh = jnp.repeat(b_in, rep, axis=2) if rep > 1 else b_in  # (B,T,H,N) via G
+    ch = jnp.repeat(c_in, rep, axis=2) if rep > 1 else c_in
+
+    def to_chunks(z, extra):
+        return z.reshape((bsz, nchunks, chunk) + extra)
+
+    xc = to_chunks(x, (h, p)).astype(jnp.float32)
+    dtc = to_chunks(dt, (h,)).astype(jnp.float32)
+    bc = to_chunks(bh, (h, n)).astype(jnp.float32)
+    cc = to_chunks(ch, (h, n)).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]                     # (B,c,Q,H) ≤ 0
+    da_cum = jnp.cumsum(da, axis=2)                       # within-chunk
+    xdt = xc * dtc[..., None]
+
+    # Intra-chunk (quadratic within chunk):
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))      # (B,c,H,Q,Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp",
+                        cc, bc, lmat, xdt)
+
+    # Chunk-final states: states[c] = Σ_k exp(da_cum[-1]-da_cum[k]) B_k xdt_k
+    decay_states = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (B,c,Q,H)
+    states = jnp.einsum("bckhn,bckh,bckhp->bchpn", bc, decay_states, xdt)
+
+    # Inter-chunk recurrence (linear scan over chunks).
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])             # (B,c,H)
+
+    def scan_body(s_prev, inp):
+        st, dec = inp                                      # (B,H,P,N), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_body, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (B,c,H,P,N)
+
+    # Off-diagonal contribution from carried state.
+    state_decay = jnp.exp(da_cum)                          # (B,c,Q,H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       cc, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, tt, h, p)[:, :t]
+    return y, final_state
+
+
+def ssd_decode_step(x, dt, a, b_in, c_in, state):
+    """Single-token recurrent update (decode).
+
+    x: (B, 1, H, P); dt: (B, 1, H); b_in/c_in: (B, 1, G, N);
+    state: (B, H, P, N) → (y (B,1,H,P), new_state).
+    """
+    bsz, _, h, p = x.shape
+    g = b_in.shape[2]
+    rep = h // g
+    bh = jnp.repeat(b_in, rep, axis=2) if rep > 1 else b_in
+    ch = jnp.repeat(c_in, rep, axis=2) if rep > 1 else c_in
+    da = jnp.exp(dt[:, 0, :].astype(jnp.float32) * a[None, :])   # (B,H)
+    xdt = (x[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)      # (B,H,P)
+    upd = jnp.einsum("bhp,bhn->bhpn", xdt, bh[:, 0].astype(jnp.float32))
+    s_new = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, ch[:, 0].astype(jnp.float32))
+    return y[:, None], s_new
+
+
+def apply_mamba2(p, x: jax.Array, cfg, *, lut=None, cache=None,
+                 impl: str = "auto"):
+    """Full Mamba2 block: in_proj → conv → SSD → gated norm → out_proj.
+
+    Returns (y, new_cache).  cache=None → training/prefill-from-scratch
+    (final state discarded for training, returned for prefill via cache={}).
+    """
+    bsz, t, d = x.shape
+    di = cfg.d_inner
+    g, n, h = cfg.ssm_n_groups, cfg.ssm_state, cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+
+    zxbcdt = linear(x, p["in_proj"], lut, impl=impl)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * g * n]
+    dt_raw = zxbcdt[..., -h:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+
+    conv_state = cache.get("conv") if cache else None
+    xbc_c, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xs = xbc_c[..., :di].reshape(bsz, t, h, hp)
+    b_in = xbc_c[..., di:di + g * n].reshape(bsz, t, g, n)
+    c_in = xbc_c[..., di + g * n:].reshape(bsz, t, g, n)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    if cache is not None and t == 1:
+        y, new_state = ssd_decode_step(xs, dt, a, b_in, c_in, cache["ssm"])
+    else:
+        init_state = cache.get("ssm") if cache else None
+        y, new_state = ssd_chunked(xs, dt, a, b_in, c_in, cfg.ssm_chunk,
+                                   init_state)
+
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, t, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = linear(y, p["out_proj"], lut, impl=impl)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_state}
+    return out, new_cache

@@ -1,0 +1,4 @@
+"""Serving runtime: compressed-weight prefill/decode (the paper's system)."""
+from .engine import ServeState, build_serve_params, make_serve_fns, generate
+
+__all__ = ["ServeState", "build_serve_params", "make_serve_fns", "generate"]

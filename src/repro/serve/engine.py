@@ -1,0 +1,234 @@
+"""Serving runtime — compressed-weight inference, the paper's system.
+
+Pipeline (paper §2.3 "inference", adapted per DESIGN.md §2):
+  1. ``build_serve_params`` (host, offline): quantize every policy-selected
+     weight to int8 per-channel, build ONE model-wide dictionary over the
+     quantized byte streams, blocked-encode each tensor. Weights now live
+     in HBM compressed.
+  2. ``prefill`` / ``decode_step`` (device, jit): each layer decodes its
+     weights on demand inside the forward graph (dict_decode → fused
+     dequant-matmul), so peak HBM = compressed model + KV cache + one
+     layer's working set — the paper's "decompress layer by layer",
+     tile-granular on TPU.
+
+Weight modes mirror the paper's evaluation triple:
+  dense → "llama3.2-*", quant → "* Quantized", compressed → "* Compressed".
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (CompressionPolicy, QuantConfig, build_lut,
+                        encode_blocked, find_frequent_sequences,
+                        quantize_linear)
+from repro.core.compressed import PackedLinear, QuantLinear
+from repro.core.blocked_codec import DEFAULT_BLOCK_WEIGHTS
+from repro.models import lm as LM
+from repro.models import encdec as ED
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class ServeState:
+    params: Any
+    lut: Optional[jax.Array]
+    table: Optional[dict]
+    mode: str
+    stats: dict
+
+
+def _iter_weight_paths(params):
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        yield jax.tree_util.keystr(path), leaf
+
+
+def build_serve_params(params: Any, policy: CompressionPolicy,
+                       *, qcfg: QuantConfig | None = None,
+                       table: dict | None = None,
+                       block_weights: int | None = None) -> ServeState:
+    """Host-side conversion dense → quant/compressed per policy.
+
+    Stacked (scanned) leaves keep their leading layer/expert dims: each
+    sub-tensor is quantized per-channel and encoded separately, then the
+    planes are re-stacked (uniform lit_cap across the stack).
+    """
+    qcfg = qcfg or QuantConfig(bits=policy.bits, granularity="per_channel")
+    bw = block_weights or policy.block_weights
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+
+    # Pass 1: decide actions; quantize selected tensors; gather byte streams.
+    actions, quantized = [], {}
+    streams = []
+    for i, (path, leaf) in enumerate(flat):
+        name = jax.tree_util.keystr(path)
+        if not hasattr(leaf, "shape") or leaf.ndim < 2:
+            actions.append("dense")
+            continue
+        shape2 = leaf.shape[-2:]         # per-layer dense shape
+        act = policy.action(name, shape2)
+        actions.append(act)
+        if act in ("quant", "compressed"):
+            stacked = leaf.reshape((-1,) + shape2)
+            qls = [quantize_linear(stacked[j], qcfg)
+                   for j in range(stacked.shape[0])]
+            quantized[i] = qls
+            if act == "compressed":
+                streams.extend(np.asarray(q.values, dtype=np.uint8)
+                               for q in qls)
+
+    # Pass 2: one model-wide dictionary (paper: single table per model).
+    if table is None and streams:
+        table = find_frequent_sequences(streams, max_codes=65535)
+    lut = None
+    if table is not None:
+        lut = jnp.asarray(build_lut(table))  # empty table → 1 zero row
+
+    # Pass 3: build containers.
+    new_leaves = []
+    n_bytes = {"dense": 0, "quant": 0, "compressed": 0}
+    for i, (path, leaf) in enumerate(flat):
+        act = actions[i]
+        if act == "dense":
+            new_leaves.append(leaf)
+            if hasattr(leaf, "nbytes"):
+                n_bytes["dense"] += int(leaf.nbytes)
+            continue
+        qls = quantized[i]
+        lead = leaf.shape[:-2]
+        if act == "quant":
+            vals = jnp.stack([q.values for q in qls]).reshape(
+                lead + leaf.shape[-2:]).astype(jnp.uint8)
+            sc = jnp.stack([q.scale for q in qls]).reshape(
+                lead + (leaf.shape[-2], 1))
+            zr = jnp.stack([q.zero for q in qls]).reshape(
+                lead + (leaf.shape[-2], 1))
+            new_leaves.append(QuantLinear(vals, sc, zr))
+            n_bytes["quant"] += int(vals.nbytes + sc.nbytes + zr.nbytes)
+        else:
+            # encode each sub-tensor with a uniform literal capacity
+            bcs = [encode_blocked(np.asarray(q.values, dtype=np.uint8),
+                                  table, lut=np.asarray(lut),
+                                  block_weights=bw) for q in qls]
+            cap = max(bc.literals.shape[1] for bc in bcs)
+            def padlit(bc):
+                cur = bc.literals.shape[1]
+                if cur == cap:
+                    return bc.literals
+                pad = jnp.zeros((bc.literals.shape[0], cap - cur,
+                                 bc.literals.shape[2]), jnp.uint8)
+                return jnp.concatenate([bc.literals, pad], axis=1)
+            codes = jnp.stack([bc.codes for bc in bcs])
+            lits = jnp.stack([padlit(bc) for bc in bcs])
+            nlit = jnp.stack([bc.nlit for bc in bcs])
+            sc = jnp.stack([q.scale for q in qls])
+            zr = jnp.stack([q.zero for q in qls])
+            if lead:
+                codes = codes.reshape(lead + codes.shape[1:])
+                lits = lits.reshape(lead + lits.shape[1:])
+                nlit = nlit.reshape(lead + nlit.shape[1:])
+                sc = sc.reshape(lead + sc.shape[1:])
+                zr = zr.reshape(lead + zr.shape[1:])
+            else:
+                codes, lits, nlit = codes[0], lits[0], nlit[0]
+                sc, zr = sc[0], zr[0]
+            from repro.sharding.partition import (clean_keystr,
+                                                  is_row_parallel)
+            pl = PackedLinear(codes, lits, nlit, sc, zr,
+                              shape=tuple(leaf.shape[-2:]),
+                              row_parallel=is_row_parallel(
+                                  clean_keystr(jax.tree_util.keystr(path))))
+            new_leaves.append(pl)
+            n_bytes["compressed"] += pl.payload_nbytes + int(
+                sc.nbytes + zr.nbytes)
+
+    params_out = treedef.unflatten(new_leaves)
+    if lut is not None:
+        n_bytes["compressed"] += int(lut.nbytes)
+    mode = policy.mode
+    return ServeState(params=params_out, lut=lut, table=table, mode=mode,
+                      stats=n_bytes)
+
+
+# ---------------------------------------------------------------------------
+# jit-able step functions.
+# ---------------------------------------------------------------------------
+
+def make_serve_fns(cfg):
+    """Returns (prefill, decode_step) closures for jit/pjit.
+
+    prefill(params, lut, tokens_or_embeds, caches) -> (last_logits, caches)
+    decode_step(params, lut, token, caches, pos) -> (logits, caches)
+    """
+    fam = cfg.family
+
+    def _last_logits(params, hidden, lut=None):
+        """LM head on the final position only — prefill never materializes
+        (B, T, V) logits (25 GiB/dev at 32k×100k-vocab; §Perf iteration 3)."""
+        head = params.get("lm_head", params.get("embed"))
+        logits = L.linear(hidden[:, -1:], head, lut)
+        if cfg.logits_softcap:
+            c = cfg.logits_softcap
+            logits = jnp.tanh(logits / c) * c
+        return logits[:, 0]
+
+    if fam == "encdec":
+        def prefill(params, lut, batch, caches):
+            hidden, new_caches = ED.forward(
+                params, cfg, batch["enc_embeds"], batch["tokens"],
+                caches=caches, pos=0, lut=lut, return_hidden=True)
+            return _last_logits(params, hidden, lut), new_caches
+
+        def decode_step(params, lut, token, caches, pos):
+            logits, new_caches = ED.decode_step(params, cfg, token, caches,
+                                                pos, lut=lut)
+            return logits[:, -1], new_caches
+        return prefill, decode_step
+
+    def prefill(params, lut, batch, caches):
+        hidden, new_caches, _ = LM.forward(
+            params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
+            caches=caches, pos=0, lut=lut, return_hidden=True)
+        return _last_logits(params, hidden, lut), new_caches
+
+    def decode_step(params, lut, token, caches, pos):
+        logits, new_caches, _ = LM.forward(params, cfg, token, caches=caches,
+                                           pos=pos, lut=lut)
+        return logits[:, -1], new_caches
+
+    return prefill, decode_step
+
+
+def generate(params, cfg, tokens, *, lut=None, max_new: int = 16,
+             max_len: int | None = None, temperature: float = 0.0,
+             key=None, embeds=None):
+    """Greedy/sampled generation loop (examples + accuracy benchmarks)."""
+    b, t0 = tokens.shape
+    extra = embeds.shape[1] if embeds is not None else 0
+    max_len = max_len or (t0 + extra + max_new)
+    caches = LM.init_caches(cfg, b, max_len)
+    prefill, decode_step = make_serve_fns(cfg)
+    logits, caches = prefill(params, lut,
+                             {"tokens": tokens, "embeds": embeds}, caches)
+    out = [tokens]
+    pos = t0 + extra
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
+    for i in range(max_new):
+        out.append(tok)
+        if i == max_new - 1:
+            break
+        logits, caches = decode_step(params, lut, tok, caches, pos)
+        if temperature > 0 and key is not None:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / temperature, axis=-1)[:, None].astype(tokens.dtype)
+        else:
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
+        pos += 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,6 @@
+"""Distribution: partition rules for params/caches/data over (pod, data, model)."""
+from .partition import (ShardingConfig, make_param_specs, make_cache_specs,
+                        make_data_specs, to_named)
+
+__all__ = ["ShardingConfig", "make_param_specs", "make_cache_specs",
+           "make_data_specs", "to_named"]

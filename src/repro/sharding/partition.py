@@ -1,0 +1,436 @@
+"""Partition rules — param path → PartitionSpec, divisibility-guarded.
+
+Scheme (DESIGN.md §5):
+  * TP ("model"): attention head dims, FFN hidden, experts (EP), vocab.
+  * FSDP ("data"): the non-TP weight dim, train mode (ZeRO-3 style) or
+    serve mode with ``fsdp_weights=True`` for models too big for TP alone.
+  * "pod": extends the data axis across pods (hierarchical DP).
+
+Every rule is applied only if the dim divides the axis size — otherwise
+that dim silently replicates (e.g. kv-heads=8 < model=16).  This keeps one
+rule table valid across all 12 architectures and both meshes.
+
+Compressed containers: the blocked codec's block axis follows the dense
+weight's *leading* (out) dim, so codes/literals/nlit shard on "model"
+exactly when the dense weight's out dim would (encode is block-aligned,
+see blocked_codec.shard_aligned_block_weights).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import AXIS_DATA, AXIS_MODEL, AXIS_POD
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    mode: str = "train"            # train | serve
+    fsdp_weights: bool = True      # shard non-TP weight dim on data axis
+    shard_embed_vocab: bool = True
+    # serve-only: also use the pod axis for FSDP weight sharding
+    pod_in_fsdp: bool = True
+
+
+# Rule table: (path regex, spec builder). Specs are written for the
+# *unstacked* weight; a leading None is prepended per stacked dim.
+# 'M' = model/TP axis, 'F' = fsdp(data) axis placeholder.
+_RULES: list[tuple[str, tuple]] = [
+    # --- attention ---------------------------------------------------------
+    (r"attn/(wq|wk|wv)$",        ("M", "F")),
+    (r"attn/(bq|bk|bv)$",        ("M",)),
+    (r"attn/wo$",                ("F", "M")),
+    (r"attn/(q_norm|k_norm)$",   (None,)),
+    # --- MLA ---------------------------------------------------------------
+    (r"attn/wq_a$",              (None, "F")),
+    (r"attn/wq_b$",              ("M", None)),
+    (r"attn/wkv_a$",             (None, "F")),
+    (r"attn/wkv_b$",             ("M", None)),
+    (r"attn/(q_a_norm|kv_a_norm)$", (None,)),
+    # --- cross attention (same shapes as attn) ------------------------------
+    (r"cross/(wq|wk|wv)$",       ("M", "F")),
+    (r"cross/wo$",               ("F", "M")),
+    # --- dense FFN -----------------------------------------------------------
+    (r"mlp/(w_gate|w_up)$",      ("M", "F")),
+    (r"mlp/w_down$",             ("F", "M")),
+    (r"shared/(w_gate|w_up)$",   ("M", "F")),
+    (r"shared/w_down$",          ("F", "M")),
+    # --- MoE -----------------------------------------------------------------
+    (r"moe/router$",             (None, None)),
+    (r"experts/(w_gate|w_up)$",  ("M", None, "F")),   # (E, ffe, d): EP on E
+    (r"experts/w_down$",         ("M", None, "F")),   # (E, d, ffe)
+    # --- mamba2 ---------------------------------------------------------------
+    (r"mamba/in_proj$",          ("M", "F")),
+    (r"mamba/out_proj$",         ("F", "M")),
+    (r"mamba/conv_w$",           ("M", None)),
+    (r"mamba/conv_b$",           ("M",)),
+    (r"mamba/(a_log|dt_bias|d_skip)$", (None,)),
+    (r"mamba/gate_norm$",        (None,)),
+    # --- embeddings / head ------------------------------------------------------
+    (r"(embed|dec_embed|lm_head)$", ("V", "F")),
+    # --- norms -------------------------------------------------------------------
+    (r"norm$",                   (None,)),
+]
+
+
+def _leaf_path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _resolve_axis(tag, scfg: ShardingConfig, mesh_axes: tuple):
+    if tag is None:
+        return None
+    if tag == "M":
+        return AXIS_MODEL if AXIS_MODEL in mesh_axes else None
+    if tag == "V":  # vocab: TP on model
+        return AXIS_MODEL if AXIS_MODEL in mesh_axes else None
+    if tag == "F":
+        if not scfg.fsdp_weights:
+            return None
+        axes = []
+        if scfg.mode == "train" or scfg.pod_in_fsdp:
+            if AXIS_POD in mesh_axes:
+                axes.append(AXIS_POD)
+        if AXIS_DATA in mesh_axes:
+            axes.append(AXIS_DATA)
+        return tuple(axes) if axes else None
+    raise ValueError(tag)
+
+
+def _axis_total(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _guarded_spec(dims: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Drop any axis the dim doesn't divide; trim/extend to rank."""
+    spec = []
+    for i, d in enumerate(shape):
+        axis = dims[i] if i < len(dims) else None
+        if axis is not None and (d == 0 or d % _axis_total(mesh, axis) != 0):
+            axis = None
+        spec.append(axis)
+    return P(*spec)
+
+
+def _spec_for_dense(path_str: str, shape: tuple, scfg: ShardingConfig,
+                    mesh: Mesh, stacked: int) -> P:
+    for pat, tags in _RULES:
+        if re.search(pat, path_str):
+            dims = tuple(_resolve_axis(t, scfg, mesh.axis_names)
+                         for t in tags)
+            dims = (None,) * stacked + dims
+            return _guarded_spec(dims, shape, mesh)
+    return _guarded_spec((), shape, mesh)  # replicate unknowns
+
+
+# Container plane handling: PackedLinear/QuantLinear/TiledPackedLinear.
+_PLANE_SUFFIX = re.compile(
+    r"/(values|codes_t|literals_t|nlit_t|codes|literals|nlit|scale|zero)$")
+
+
+def _spec_for_plane(path_str: str, plane: str, shape: tuple,
+                    scfg: ShardingConfig, mesh: Mesh) -> P:
+    """Compressed planes shard along their leading (out-block) axis exactly
+    when the dense weight's out dim is TP-sharded.  With ``fsdp_weights``
+    the data/pod axes stack onto the same block axis (codec blocks have no
+    second weight dim to FSDP separately): a 405B model's planes then live
+    /256, gathered per layer like any FSDP param."""
+    base = _PLANE_SUFFIX.sub("", path_str)
+    for pat, tags in _RULES:
+        if re.search(pat, base):
+            # NOTE(§Perf DP2, refuted): sharding expert planes on the
+            # (stacked) E dim instead of the block axis aligns decoded
+            # experts with the (E:model) dispatch, but removes the FSDP
+            # block sharding that 1T-scale MoE needs — kimi prefill blew
+            # 49.6 → 91.2 GiB/dev.  Block-axis sharding retained.
+            out_tag = tags[0]   # dense out-dim tag drives everything
+            axis = _resolve_axis(out_tag, scfg, mesh.axis_names)
+            fsdp = _resolve_axis("F", scfg, mesh.axis_names)
+            stacked = len(shape) - _plane_rank(plane)
+            if plane in ("codes_t", "literals_t", "nlit_t"):
+                # 2D tiles: tile axis on data, block axis on model —
+                # weights permanently resident, zero use-time collectives.
+                # Across pods weights REPLICATE (production choice: DCN is
+                # too slow to stream weights; pods carry batch).
+                m_axis = (AXIS_MODEL if AXIS_MODEL in mesh.axis_names
+                          else None)
+                d_axis = AXIS_DATA if AXIS_DATA in mesh.axis_names else None
+                dims = ((None,) * stacked + (d_axis, m_axis) +
+                        (None,) * (_plane_rank(plane) - 2))
+                return _guarded_spec(dims, shape, mesh)
+            if plane in ("codes", "literals", "nlit") and fsdp is not None:
+                parts = list(fsdp if isinstance(fsdp, tuple) else (fsdp,))
+                for a in (axis if isinstance(axis, tuple)
+                          else (axis,) if axis else ()):
+                    if a not in parts:       # wo/w_down have out_tag == F
+                        parts.append(a)
+                axis = tuple(parts)
+            # rank layout: [stacked...] + plane dims; shard 1st plane dim.
+            dims = (None,) * stacked + (axis,) + (None,) * (
+                _plane_rank(plane) - 1)
+            return _guarded_spec(dims, shape, mesh)
+    return _guarded_spec((), shape, mesh)
+
+
+def _plane_rank(plane: str) -> int:
+    return {"values": 2, "codes": 2, "literals": 3, "nlit": 1,
+            "scale": 2, "zero": 2,
+            "codes_t": 3, "literals_t": 4, "nlit_t": 2}[plane]
+
+
+def clean_keystr(name: str) -> str:
+    """jax keystr "['blocks']['mlp']['w_down']" -> "blocks/mlp/w_down"."""
+    return re.sub(r"[\[\]']+", "/", name).strip("/")
+
+
+def is_row_parallel(path_str: str) -> bool:
+    """True for weights whose matmul contracts the model-sharded dim
+    (wo / w_down: tags ("F", "M")) — their compressed planes decode to
+    row-sharded layout, and the consumer must reshard the decoded weight,
+    not the activations (§Perf P2)."""
+    for pat, tags in _RULES:
+        if re.search(pat, path_str):
+            return len(tags) >= 2 and tags[0] == "F" and tags[1] == "M"
+    return False
+
+
+def make_param_specs(params: Any, mesh: Mesh,
+                     scfg: ShardingConfig | None = None,
+                     stacked_detector=None) -> Any:
+    """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    Stacked (scanned) leading dims are detected by comparing leaf rank to
+    the rule's expected rank; anything extra on the left replicates.
+    """
+    scfg = scfg or ShardingConfig()
+
+    def one(path, leaf):
+        path_str = _leaf_path_str(path)
+        shape = tuple(leaf.shape)
+        m = _PLANE_SUFFIX.search(path_str)
+        if m:
+            return _spec_for_plane(path_str, m.group(1), shape, scfg, mesh)
+        # dense leaf: infer stacked dims from rule rank
+        for pat, tags in _RULES:
+            if re.search(pat, path_str):
+                stacked = max(0, len(shape) - len(tags))
+                return _spec_for_dense(path_str, shape, scfg, mesh, stacked)
+        return _guarded_spec((), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def make_cache_specs(caches: Any, mesh: Mesh, batch_axis=None) -> Any:
+    """KV/SSM cache specs: batch on data axes when divisible, heads/state
+    dims on model when divisible."""
+    batch_axes = batch_axis if batch_axis is not None else (
+        tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
+        or None)
+
+    msize = mesh.shape[AXIS_MODEL] if AXIS_MODEL in mesh.axis_names else 1
+
+    def one(path, leaf):
+        path_str = _leaf_path_str(path)
+        shape = tuple(leaf.shape)
+        # stacked layer dim first for 'blocks' caches and enc-dec cross K/V
+        stacked = 1 if (path_str.startswith("blocks")
+                        or re.search(r"(^|/)(enc_k|enc_v|self)(/|$)",
+                                     path_str)) else 0
+        dims: list = [None] * len(shape)
+        bdim = stacked  # batch right after optional layer dim
+        if bdim < len(shape):
+            dims[bdim] = batch_axes
+        if re.search(r"(^|/)(k|v|enc_k|enc_v)$", path_str) and len(shape) >= stacked + 4:
+            # (B, T, H, hd): heads on model when they divide; else the TIME
+            # dim (flash-decode style sequence-parallel KV).  Sharding
+            # head_dim instead puts the contraction dim on the mesh and
+            # SPMD all-gathers the full cache in f32 every decode step
+            # (measured 1 GiB/layer on internlm2; §Perf iteration 6).
+            if shape[stacked + 2] % msize == 0:
+                dims[stacked + 2] = AXIS_MODEL
+            elif shape[stacked + 1] % msize == 0:
+                dims[stacked + 1] = AXIS_MODEL
+            else:
+                dims[stacked + 3] = AXIS_MODEL
+        if re.search(r"/(k|v)_scale$", path_str) and len(shape) >= stacked + 4:
+            # int8-KV scales: mirror the k/v plane sharding (minus head_dim)
+            if shape[stacked + 2] % msize == 0:
+                dims[stacked + 2] = AXIS_MODEL
+            elif shape[stacked + 1] % msize == 0:
+                dims[stacked + 1] = AXIS_MODEL
+        if re.search(r"/ssm$", path_str) and len(shape) >= stacked + 4:
+            if shape[stacked + 1] % msize == 0:
+                dims[stacked + 1] = AXIS_MODEL  # (B, H, P, N): ssm heads
+            else:
+                dims[stacked + 3] = AXIS_MODEL  # state dim
+        if re.search(r"/conv$", path_str) and len(shape) >= stacked + 3:
+            dims[stacked + 2] = AXIS_MODEL      # (B, K-1, C): channels
+        if re.search(r"/(ckv|krope)$", path_str) and len(shape) >= stacked + 3:
+            # (B, L, r): sequence-parallel latents (same rationale as k/v)
+            if shape[stacked + 1] % msize == 0:
+                dims[stacked + 1] = AXIS_MODEL
+            else:
+                dims[stacked + 2] = AXIS_MODEL
+        return _guarded_spec(tuple(dims), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def make_data_specs(batch_like: Any, mesh: Mesh) -> Any:
+    """Token/label/embedding inputs: batch dim on (pod, data)."""
+    axes = tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
+    baxis = axes if axes else None
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        dims = [None] * len(shape)
+        if shape:
+            dims[0] = baxis
+        return _guarded_spec(tuple(dims), shape, mesh)
+
+    return jax.tree_util.tree_map(one, batch_like)
+
+
+def make_train_state_specs(state: Any, mesh: Mesh,
+                           scfg: ShardingConfig | None = None) -> Any:
+    """Specs for {"params", "opt": {"mu", "step"}[, "grad_error"]}.
+
+    fp32 moments mirror their parameter's spec (ZeRO-3: fully sharded with
+    the FSDP'd params); int8 QMoment planes shard their flat block axis
+    over every mesh axis (pure ZeRO — optimizer state has no TP structure
+    to preserve).
+    """
+    scfg = scfg or ShardingConfig(mode="train")
+    pspecs = make_param_specs(state["params"], mesh, scfg)
+    all_axes = tuple(a for a in (AXIS_POD, AXIS_DATA, AXIS_MODEL)
+                     if a in mesh.axis_names)
+
+    def mu_spec(param_spec, mu):
+        def moment(leaf_like):
+            # QMoment planes are the param reshaped (*lead, last//b, b):
+            # inherit the param's spec with the last axis moved onto the
+            # block-count dim (pure within-dim reshape, sharding-exact).
+            if hasattr(leaf_like, "_fields"):  # NamedTuple QMoment
+                pdims = list(param_spec) if param_spec else []
+                pdims += [None] * (len(leaf_like.q.shape) - 1 - len(pdims))
+                qdims = tuple(pdims[:-1]) + (pdims[-1] if pdims else None,
+                                             None)
+                def plane(x):
+                    return _guarded_spec(qdims, tuple(x.shape), mesh)
+                return type(leaf_like)(
+                    plane(leaf_like.q), plane(leaf_like.scale),
+                    plane(leaf_like.zero))
+            return param_spec
+        return {"m": moment(mu["m"]), "v": moment(mu["v"])}
+
+    is_mu = lambda x: isinstance(x, dict) and set(x) == {"m", "v"}
+    mu_specs = jax.tree_util.tree_map(
+        mu_spec, pspecs, state["opt"]["mu"],
+        is_leaf=lambda x: isinstance(x, P) or is_mu(x))
+    out = {"params": pspecs,
+           "opt": {"mu": mu_specs, "step": P()}}
+    if "grad_error" in state:
+        out["grad_error"] = pspecs
+    return out
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# In-graph sharding constraints (steer SPMD where propagation picks badly).
+# ---------------------------------------------------------------------------
+
+import contextlib
+
+_ACTIVE_MESH: list = []        # explicit mesh stack (see active_mesh)
+
+
+@contextlib.contextmanager
+def active_mesh(mesh: Mesh):
+    """Make ``mesh`` visible to :func:`constrain` during tracing.
+
+    The legacy ``with mesh:`` context does not populate JAX's abstract mesh
+    during jit tracing, so in-graph constraints need the mesh threaded
+    explicitly.  Launchers (dryrun/train/serve) wrap lowering in this.
+    """
+    _ACTIVE_MESH.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.pop()
+
+
+def _current_axis_sizes():
+    if _ACTIVE_MESH:
+        m = _ACTIVE_MESH[-1]
+        return dict(m.shape), m
+    try:
+        from jax.sharding import get_abstract_mesh
+        m = get_abstract_mesh()
+        return dict(zip(m.axis_names, m.axis_sizes)), m
+    except Exception:  # noqa: BLE001 — no mesh: constraint is a no-op
+        return {}, None
+
+
+def constrain(x, *dims):
+    """Best-effort ``with_sharding_constraint`` inside jit.
+
+    ``dims`` are mesh-axis names (or tuples of names) per dimension of
+    ``x``; axes absent from the active mesh, or that don't divide the dim,
+    are dropped — so model code can name ("pod","data")/"model" freely and
+    still trace mesh-less (tests, CPU examples) where this is a no-op.
+    """
+    axis_sizes, mesh = _current_axis_sizes()
+    if not axis_sizes:
+        return x
+    spec = []
+    for i, d in enumerate(dims):
+        if i >= x.ndim:
+            break
+        cand = d if isinstance(d, tuple) else (d,) if d else ()
+        cand = tuple(a for a in cand if a in axis_sizes)
+        total = 1
+        for a in cand:
+            total *= axis_sizes[a]
+        if not cand or x.shape[i] % total != 0:
+            spec.append(None)
+        else:
+            spec.append(cand if len(cand) > 1 else cand[0])
+    spec += [None] * (x.ndim - len(spec))
+    sharding = P(*spec)
+    if isinstance(mesh, Mesh):          # concrete mesh: bind explicitly
+        sharding = NamedSharding(mesh, sharding)
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+BATCH_AXES = (AXIS_POD, AXIS_DATA)
+
+
+def constrain_batch(x):
+    """Shard dim-0 across (pod, data) — activations along the whole stack."""
+    return constrain(x, BATCH_AXES)

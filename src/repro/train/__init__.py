@@ -1,0 +1,10 @@
+"""Training runtime: optimizer, steps, data, checkpoint, fault tolerance."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from .steps import TrainConfig, make_train_step, init_train_state, cross_entropy
+from .data import DataConfig, DataPipeline
+from . import checkpoint, fault
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_schedule",
+           "TrainConfig", "make_train_step", "init_train_state",
+           "cross_entropy", "DataConfig", "DataPipeline", "checkpoint",
+           "fault"]

@@ -1,0 +1,208 @@
+"""Training step functions — loss, grads, optimizer, gradient compression.
+
+``make_train_step`` builds the jit-able step for any arch family; the
+returned function's (in_shardings, out_shardings) come from
+``repro.sharding``.  Gradient compression (int8 + error feedback, the
+paper's quantizer on the wire) is a config flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+from repro.models import encdec as ED
+from repro.sharding.partition import constrain
+from .optimizer import AdamWConfig, adamw_update, adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = AdamWConfig()
+    z_loss: float = 1e-4
+    moe_aux_weight: float = 1e-2
+    grad_compression: str = "none"      # none | int8_ef
+    param_dtype: Any = jnp.float32
+    logits_chunk: int = 0               # 0 = no chunking
+    accum_steps: int = 1                # gradient-accumulation microbatches
+    # accumulator dtype: f32 default; bf16 halves the dominant train-state
+    # buffer for 1T-scale models (§Perf K2) at ~1e-3 relative grad error
+    accum_dtype: Any = jnp.float32
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0):
+    """Token-mean CE with optional z-loss; logits (B,T,V), labels (B,T)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(lse - ll)
+    if z_loss:
+        ce = ce + z_loss * jnp.mean(lse ** 2)
+    return ce
+
+
+def chunked_cross_entropy(hidden: jax.Array, head: jax.Array,
+                          labels: jax.Array, *, chunk: int,
+                          z_loss: float = 0.0,
+                          softcap: float = 0.0) -> jax.Array:
+    """CE without materializing (B, T, V) logits.
+
+    Scans sequence chunks: each step computes a (B, c, V) logits slice,
+    reduces it to scalars, and ``jax.checkpoint`` forces the slice to be
+    recomputed in the backward pass instead of saved.  Peak logits memory
+    drops by T/chunk (e.g. 4096/512 = 8×) — the lever that lets the
+    256k-vocab archs (seamless 256206, llama3-405b 128256) fit the train
+    shape (EXPERIMENTS.md §Perf).
+
+    hidden: (B, T, d); head: (V, d); labels: (B, T).
+    """
+    b, t, d = hidden.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    n = t // c
+    hs = hidden.reshape(b, n, c, d).swapaxes(0, 1)     # (n, B, c, d)
+    ls = labels.reshape(b, n, c).swapaxes(0, 1)        # (n, B, c)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, lab = xs
+        logits = jnp.einsum("bcd,vd->bcv", h.astype(jnp.float32),
+                            head.astype(jnp.float32))
+        # Keep the logits slice sharded (batch × vocab-TP): SPMD propagation
+        # otherwise replicates it when hidden's batch and head's d_model both
+        # live on the data axis (measured 31 GiB/dev → 131 MiB/dev, §Perf).
+        logits = constrain(logits, ("pod", "data"), None, "model")
+        if softcap:
+            logits = jnp.tanh(logits / softcap) * softcap
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        ce_sum, z_sum = acc
+        return (ce_sum + jnp.sum(lse - ll), z_sum + jnp.sum(lse ** 2)), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(body, (jnp.float32(0.0),
+                                             jnp.float32(0.0)), (hs, ls))
+    ce = ce_sum / (b * t)
+    if z_loss:
+        ce = ce + z_loss * z_sum / (b * t)
+    return ce
+
+
+def _loss_fn(params, cfg, tcfg: TrainConfig, batch, lut=None):
+    fam = cfg.family
+    chunked = tcfg.logits_chunk > 0
+    if fam == "encdec":
+        out, _ = ED.forward(params, cfg, batch["enc_embeds"],
+                            batch["tokens"], lut=lut, return_hidden=chunked)
+        aux = 0.0
+    else:
+        out, _, aux = LM.forward(params, cfg, batch["tokens"],
+                                 embeds=batch.get("embeds"), lut=lut,
+                                 return_hidden=chunked)
+        if fam == "vlm" and batch.get("embeds") is not None:
+            out = out[:, batch["embeds"].shape[1]:]
+    if chunked:
+        head = params.get("lm_head", params.get("embed"))
+        loss = chunked_cross_entropy(out, head, batch["labels"],
+                                     chunk=tcfg.logits_chunk,
+                                     z_loss=tcfg.z_loss,
+                                     softcap=cfg.logits_softcap)
+    else:
+        loss = cross_entropy(out, batch["labels"], tcfg.z_loss)
+    if cfg.is_moe:
+        loss = loss + tcfg.moe_aux_weight * aux
+    return loss, {"ce": loss}
+
+
+def compress_grads_int8(grads, error_fb):
+    """int8 gradient compression with error feedback (per-tensor affine).
+
+    Models the wire format of a compressed cross-pod all-reduce: quantize
+    (g + e) to int8, dequantize for the update, keep the residual as the
+    next step's feedback.  Under pjit the all-reduce itself is inserted by
+    XLA; this shapes *what* is reduced.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        mn = jnp.min(gf)
+        mx = jnp.max(gf)
+        scale = jnp.maximum((mx - mn) / 255.0, 1e-12)
+        q = jnp.clip(jnp.round((gf - mn) / scale), 0, 255)
+        dq = q * scale + mn
+        return dq.astype(g.dtype), gf - dq
+
+    flat_g, td = jax.tree_util.tree_flatten(grads)
+    flat_e = td.flatten_up_to(error_fb)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in out]), td.unflatten([o[1] for o in out])
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", ["grad_error"]}.
+    """
+    use_ef = tcfg.grad_compression == "int8_ef"
+
+    def _grads(params, batch):
+        """Loss + grads, with optional microbatched accumulation: the batch
+        splits on its leading dim and a lax.scan accumulates grads — the
+        standard activation-memory lever for the giant train shapes (one
+        microbatch's activations live at a time)."""
+        if tcfg.accum_steps <= 1:
+            return jax.value_and_grad(_loss_fn, has_aux=True)(
+                params, cfg, tcfg, batch)
+
+        a = tcfg.accum_steps
+
+        def split(x):
+            b = x.shape[0]
+            assert b % a == 0, (b, a)
+            return x.reshape((a, b // a) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+
+        def body(acc, mb):
+            (l, p), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+                params, cfg, tcfg, mb)
+            acc_g, acc_l = acc
+            acc_g = jax.tree_util.tree_map(
+                lambda x, y: x + y.astype(x.dtype), acc_g, g)
+            return (acc_g, acc_l + l), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, tcfg.accum_dtype), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0.0)), micro)
+        # keep the accumulator dtype here — the optimizer casts per tensor,
+        # so a global f32 view (2× param bytes) never materializes
+        gavg = jax.tree_util.tree_map(lambda x: x / a, gsum)
+        loss = lsum / a
+        return (loss, {"ce": loss}), gavg
+
+    def train_step(state, batch):
+        params = state["params"]
+        (loss, parts), grads = _grads(params, batch)
+        if use_ef:
+            grads, new_err = compress_grads_int8(grads, state["grad_error"])
+        new_params, new_opt, om = adamw_update(params, grads, state["opt"],
+                                               tcfg.optimizer)
+        new_state = {"params": new_params, "opt": new_opt}
+        if use_ef:
+            new_state["grad_error"] = new_err
+        metrics = {"loss": loss, **om}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(params, tcfg: TrainConfig):
+    state = {"params": params, "opt": adamw_init(params, tcfg.optimizer)}
+    if tcfg.grad_compression == "int8_ef":
+        state["grad_error"] = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state

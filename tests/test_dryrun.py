@@ -1,0 +1,101 @@
+"""Dry-run machinery tests — the core distribution deliverable.
+
+The full 512-device sweep lives in launch/dryrun.py (results committed in
+EXPERIMENTS.md); here a subprocess compiles ONE real cell end-to-end as a
+regression guard, plus unit tests for the trip-weighted HLO cost model.
+"""
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch import hlo_stats
+
+
+_CELL_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.dryrun import run_cell
+rec = run_cell("internlm2-1.8b", "decode_32k", multi_pod=False)
+assert rec["ok"], rec.get("error")
+assert rec["memory"]["total_hbm_bytes"] > 0
+assert rec["hlo_cost"]["flops"] > 0
+assert rec["collectives"]["total_bytes"] >= 0
+# the decode collective fix (§Perf D1/6) must hold: < 2 GiB per step
+assert rec["collectives"]["total_bytes"] < 2 * 2**30, \
+    rec["collectives"]["total_bytes"]
+# fits the 16 GiB v5e HBM
+assert rec["memory"]["total_hbm_bytes"] < 16 * 2**30
+print("CELL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess():
+    r = subprocess.run([sys.executable, "-c", _CELL_SCRIPT],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "CELL_OK" in r.stdout, r.stdout[-2000:] + r.stderr[-2000:]
+
+
+_HLO = """
+HloModule m
+
+%fused_computation.1 (param_0.1: f32[8,64], param_1.1: s32[]) -> f32[1,64] {
+  %param_0.1 = f32[8,64]{1,0} parameter(0)
+  %param_1.1 = s32[] parameter(1)
+  ROOT %ds = f32[1,64]{1,0} dynamic-slice(%param_0.1, %param_1.1), dynamic_slice_sizes={1,64}
+}
+
+%body (p: (s32[], f32[4,8], f32[8,64])) -> (s32[], f32[4,8], f32[8,64]) {
+  %p = (s32[], f32[4,8], f32[8,64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %a = f32[4,8]{1,0} get-tuple-element(%p), index=1
+  %big = f32[8,64]{1,0} get-tuple-element(%p), index=2
+  %sl = f32[1,64]{1,0} fusion(%big, %iv), kind=kLoop, calls=%fused_computation.1
+  %b = f32[8,4]{1,0} transpose(%a), dimensions={1,0}
+  %dot = f32[4,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,8], f32[8,64]) tuple(%iv, %a, %big)
+}
+
+%cond (p: (s32[], f32[4,8], f32[8,64])) -> pred[] {
+  %p = (s32[], f32[4,8], f32[8,64]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%iv, %c), direction=LT
+}
+
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %x = f32[4,8]{1,0} parameter(0)
+  %w = (s32[], f32[4,8], f32[8,64]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_cost_trip_weighted_dot_flops():
+    cost = hlo_stats.hlo_cost(_HLO)
+    # dot: 2 * (4*4 result) * 8 contracting = 256 flops, * 10 trips
+    assert cost["flops"] == 256 * 10, cost
+
+
+def test_hlo_cost_fusion_slice_reads():
+    # the fusion reads a (1,64) slice of the (8,64) param, not all of it
+    comps = hlo_stats._split_computations(_HLO)
+    assert "fused_computation.1" in comps
+    fusion_ln = next(ln for ln in comps["body"] if " fusion(" in ln)
+    reads = hlo_stats._fusion_read_bytes(fusion_ln, [8 * 64 * 4, 4], comps)
+    assert reads == 1 * 64 * 4 + 4, reads   # 256 B slice + 4 B index, not 2052
+    # and the full walk stays far below the naive all-operand count
+    cost = hlo_stats.hlo_cost(_HLO)
+    assert 10_000 <= cost["bytes"] <= 16_000, cost
+
+
+def test_computation_weights_nested():
+    comps = hlo_stats._split_computations(_HLO)
+    trips = hlo_stats._find_while_trips(comps)
+    w = hlo_stats._computation_weights(comps, trips)
+    assert w["body"] == 10
+    assert w["main"] == 1
+    # fusion computations are costed at the call site, not walked
+    assert w.get("fused_computation.1", 0) == 0

@@ -1,0 +1,163 @@
+"""Quantization core — unit + property tests (paper §3)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QuantConfig, quantize, dequantize, fake_quant,
+                              quantization_error, TernaryTensor)
+from repro.core import gptq
+
+
+BITS = [2, 4, 6, 8]
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_channel",
+                                         "per_group"])
+def test_roundtrip_error_bound(bits, granularity, rng):
+    """|x - Q(x)| <= scale/2 elementwise — the defining affine-quant bound."""
+    x = jnp.asarray(rng.normal(size=(16, 64)).astype(np.float32))
+    cfg = QuantConfig(bits=bits, granularity=granularity, group_size=32)
+    qt = quantize(x, cfg)
+    xr = dequantize(qt)
+    assert xr.shape == x.shape and xr.dtype == x.dtype
+    err = jnp.abs(x - xr)
+    # scale may be per-tensor/channel/group; bound with its max
+    assert float(err.max()) <= float(qt.scale.max()) / 2 + 1e-6
+
+
+def test_more_bits_less_error(rng):
+    x = jnp.asarray(rng.normal(size=(32, 128)).astype(np.float32))
+    errs = [float(quantization_error(x, QuantConfig(bits=b)))
+            for b in BITS]
+    assert errs == sorted(errs, reverse=True), errs
+
+
+def test_paper_per_tensor_zero_point_integer(rng):
+    """Paper's find_params: zero = round(-min/scale) is an integer code."""
+    x = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+    qt = quantize(x, QuantConfig(bits=8, granularity="per_tensor"))
+    assert float(qt.zero[0]) == round(float(qt.zero[0]))
+
+
+def test_ternary_matches_paper_semantics(rng):
+    """Paper Listing 1 maxq<0 branch: x > scale/2 -> scale; x < zero/2 -> zero."""
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    cfg = QuantConfig(bits=1.5)
+    qt = quantize(x, cfg)
+    assert isinstance(qt, TernaryTensor)
+    xr = dequantize(qt)
+    xmax, xmin = float(jnp.max(x)), float(jnp.min(x))
+    expect = np.where(np.asarray(x) > xmax / 2, xmax,
+                      np.where(np.asarray(x) < xmin / 2, xmin, 0.0))
+    np.testing.assert_allclose(np.asarray(xr), expect, rtol=1e-6)
+
+
+def test_ternary_high_sparsity_on_gaussian(rng):
+    """QMoE's premise: ternary quantization of ~N(0,1) is mostly zeros."""
+    x = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
+    qt = quantize(x, QuantConfig(bits=1.5))
+    sparsity = float(jnp.mean(dequantize(qt) == 0.0))
+    assert sparsity > 0.85  # paper: "nearly ninety percent"
+
+
+def test_int8_near_zero_sparsity(rng):
+    """Paper §2.5: our 8-bit models have 'close to zero' sparsity."""
+    x = jnp.asarray(rng.normal(size=(256, 256)).astype(np.float32))
+    qt = quantize(x, QuantConfig(bits=8, granularity="per_channel"))
+    sparsity = float(jnp.mean(dequantize(qt) == 0.0))
+    assert sparsity < 0.05
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 8), cols=st.integers(1, 65),
+       bits=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2**16))
+def test_property_codes_in_range_and_shape(rows, cols, bits, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(rows, cols)).astype(np.float32) *
+                    r.uniform(0.01, 10))
+    cfg = QuantConfig(bits=bits, granularity="per_channel")
+    qt = quantize(x, cfg)
+    vals = np.asarray(qt.values)
+    assert vals.min() >= 0 and vals.max() <= 2 ** bits - 1
+    assert dequantize(qt).shape == (rows, cols)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_quantize_idempotent(seed):
+    """fake_quant(fake_quant(x)) == fake_quant(x): grid points are fixed."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(size=(8, 32)).astype(np.float32))
+    cfg = QuantConfig(bits=8, granularity="per_channel")
+    y1 = fake_quant(x, cfg)
+    y2 = fake_quant(y1, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_constant_rows_stable(rng):
+    x = jnp.ones((4, 32)) * 3.0
+    qt = quantize(x, QuantConfig(bits=8, granularity="per_channel"))
+    assert np.isfinite(np.asarray(dequantize(qt))).all()
+
+
+# ---------------------------------------------------------------------------
+# GPTQ
+# ---------------------------------------------------------------------------
+
+def _calib(rng, n, d, correlated=True):
+    if correlated:
+        basis = rng.normal(size=(d, d // 4)).astype(np.float32)
+        z = rng.normal(size=(n, d // 4)).astype(np.float32)
+        return jnp.asarray(z @ basis.T + 0.05 * rng.normal(size=(n, d)))
+    return jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+
+def test_gptq_beats_naive_on_task_loss(rng):
+    """GPTQ minimizes tr(dW H dW'); on correlated activations it must beat
+    round-to-nearest on that objective (paper §3's reason to use it)."""
+    d, out = 64, 32
+    w = jnp.asarray(rng.normal(size=(out, d)).astype(np.float32))
+    xs = [_calib(rng, 256, d) for _ in range(4)]
+    h = gptq.init_hessian(d)
+    for x in xs:
+        h = gptq.accumulate_hessian(h, x)
+    cfg = QuantConfig(bits=4, granularity="per_channel")
+    qt_gptq = gptq.gptq_quantize(w, h, cfg)
+    qt_rtn = quantize(w, cfg)
+    e_gptq = float(gptq.gptq_layer_error(w, qt_gptq, h))
+    e_rtn = float(gptq.gptq_layer_error(w, qt_rtn, h))
+    assert e_gptq < e_rtn * 0.9, (e_gptq, e_rtn)
+
+
+def test_gptq_8bit_high_fidelity(rng):
+    d, out = 32, 16
+    w = jnp.asarray(rng.normal(size=(out, d)).astype(np.float32))
+    xs = [_calib(rng, 128, d)]
+    qt = gptq.calibrate_and_quantize(w, xs, QuantConfig(bits=8))
+    rel = float(jnp.linalg.norm(dequantize(qt) - w) / jnp.linalg.norm(w))
+    assert rel < 0.01, rel
+
+
+def test_gptq_dead_columns(rng):
+    """Columns with no calibration signal must not produce NaNs."""
+    d, out = 16, 8
+    w = jnp.asarray(rng.normal(size=(out, d)).astype(np.float32))
+    x = np.array(_calib(rng, 64, d, correlated=False))
+    x[:, 3] = 0.0
+    h = gptq.accumulate_hessian(gptq.init_hessian(d), jnp.asarray(x))
+    qt = gptq.gptq_quantize(w, h, QuantConfig(bits=8))
+    assert np.isfinite(np.asarray(dequantize(qt))).all()
+
+
+def test_gptq_codes_layout_matches_quantlinear(rng):
+    from repro.core.compressed import quantize_linear
+    w = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    h = gptq.accumulate_hessian(gptq.init_hessian(16), _calib(rng, 64, 16))
+    qt = gptq.gptq_quantize(w, h, QuantConfig(bits=8))
+    assert qt.values.shape == (8, 16)
+    assert qt.scale.shape == (8, 1)

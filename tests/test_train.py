@@ -1,0 +1,206 @@
+"""Training-substrate tests: loss descent, chunked CE, accumulation,
+int8 optimizer state, gradient compression."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm as LM
+from repro.train.data import DataConfig, DataPipeline
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   QMoment, lr_schedule, moment_block)
+from repro.train.steps import (TrainConfig, make_train_step,
+                               init_train_state, cross_entropy,
+                               chunked_cross_entropy, compress_grads_int8)
+
+
+def _tiny():
+    cfg = get_config("llama3.2-1b").smoke
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def test_loss_decreases_on_learnable_data():
+    cfg, params = _tiny()
+    data = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, batch=16,
+                                   seq_len=32, seed=3))
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-2, warmup_steps=10,
+                                             total_steps=2000))
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    losses = []
+    for i in range(80):
+        state, m = step(state, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 1.0, losses
+
+
+def test_chunked_ce_matches_full(rng):
+    b, t, d, v = 2, 16, 8, 32
+    hidden = jnp.asarray(rng.normal(size=(b, t, d)).astype(np.float32))
+    head = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, v, size=(b, t)))
+    full = cross_entropy(jnp.einsum("btd,vd->btv", hidden, head), labels,
+                         z_loss=1e-4)
+    for chunk in (4, 8, 16, 5):
+        ch = chunked_cross_entropy(hidden, head, labels, chunk=chunk,
+                                   z_loss=1e-4)
+        np.testing.assert_allclose(float(ch), float(full), rtol=1e-5)
+
+
+def test_chunked_ce_gradients_match(rng):
+    b, t, d, v = 2, 8, 4, 16
+    hidden = jnp.asarray(rng.normal(size=(b, t, d)).astype(np.float32))
+    head = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, v, size=(b, t)))
+    g_full = jax.grad(lambda h: cross_entropy(
+        jnp.einsum("btd,vd->btv", h, head), labels))(hidden)
+    g_chunk = jax.grad(lambda h: chunked_cross_entropy(
+        h, head, labels, chunk=4))(hidden)
+    np.testing.assert_allclose(np.asarray(g_chunk), np.asarray(g_full),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_accumulation_matches_single_batch():
+    """accum_steps=k over a batch == one step over the same batch (mean)."""
+    cfg, params = _tiny()
+    data = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, batch=8,
+                                   seq_len=8, seed=1))
+    batch = data.batch_at(0)
+    outs = {}
+    for accum in (1, 4):
+        tcfg = TrainConfig(accum_steps=accum)
+        state = init_train_state(params, tcfg)
+        step = jax.jit(make_train_step(cfg, tcfg))
+        new_state, m = step(state, batch)
+        outs[accum] = (float(m["loss"]),
+                       np.asarray(jax.tree_util.tree_leaves(
+                           new_state["params"])[0]))
+    assert outs[1][0] == pytest.approx(outs[4][0], rel=1e-4)
+    np.testing.assert_allclose(outs[1][1], outs[4][1], rtol=1e-3, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer.
+# ---------------------------------------------------------------------------
+
+def test_adamw_quantized_state_tracks_fp32(rng):
+    """int8 moments: updates stay close to exact AdamW over many steps."""
+    w = jnp.asarray(rng.normal(size=(16, 256)).astype(np.float32))
+    cfg_q = AdamWConfig(lr=1e-2, quantized_state=True, qblock=64,
+                        warmup_steps=0)
+    cfg_f = AdamWConfig(lr=1e-2, quantized_state=False, warmup_steps=0)
+    pq, pf = {"w": w}, {"w": w}
+    sq, sf = adamw_init(pq, cfg_q), adamw_init(pf, cfg_f)
+    assert isinstance(sq["mu"]["w"]["m"], QMoment)
+    for i in range(20):
+        g = {"w": jnp.asarray(rng.normal(size=w.shape).astype(np.float32))}
+        pq, sq, _ = adamw_update(pq, g, sq, cfg_q)
+        pf, sf, _ = adamw_update(pf, g, sf, cfg_f)
+    rel = float(jnp.linalg.norm(pq["w"] - pf["w"]) /
+                jnp.linalg.norm(pf["w"] - w))
+    assert rel < 0.15, rel  # drift bounded (8-bit Adam regime)
+
+
+def test_moment_block_divides():
+    assert moment_block(16384, 256) == 256
+    assert moment_block(448, 256) == 224 or 448 % moment_block(448, 256) == 0
+    assert moment_block(7, 256) == 7
+
+
+def test_qmoment_shapes_mirror_param(rng):
+    p = {"w": jnp.zeros((4, 6, 512), jnp.float32)}
+    cfg = AdamWConfig(quantized_state=True, qblock=128)
+    st = adamw_init(p, cfg)
+    qm = st["mu"]["w"]["m"]
+    assert qm.q.shape == (4, 6, 4, 128)
+    assert qm.scale.shape == (4, 6, 4, 1)
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(lr_schedule(0, cfg)) == pytest.approx(0.0)
+    assert float(lr_schedule(10, cfg)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_schedule(100, cfg)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_grad_clip_applies(rng):
+    cfg = AdamWConfig(lr=0.0, grad_clip=1.0)  # lr 0: only metrics matter
+    p = {"w": jnp.zeros((8, 8), jnp.float32)}
+    st = adamw_init(p, cfg)
+    g = {"w": jnp.full((8, 8), 100.0)}
+    _, _, m = adamw_update(p, g, st, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(800.0)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback).
+# ---------------------------------------------------------------------------
+
+def test_grad_compression_error_feedback_unbiased(rng):
+    """Summed over steps, EF compensates: Σ dq ≈ Σ g."""
+    g_sum = np.zeros((32, 32), np.float32)
+    dq_sum = np.zeros((32, 32), np.float32)
+    err = {"w": jnp.zeros((32, 32), jnp.float32)}
+    for i in range(50):
+        g = {"w": jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))}
+        dq, err = compress_grads_int8(g, err)
+        g_sum += np.asarray(g["w"])
+        dq_sum += np.asarray(dq["w"])
+    resid = np.linalg.norm(dq_sum - g_sum) / np.linalg.norm(g_sum)
+    assert resid < 0.01, resid  # residual = current error feedback only
+
+
+def test_grad_compression_single_step_quantization_error_small(rng):
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))}
+    err0 = {"w": jnp.zeros((64, 64), jnp.float32)}
+    dq, err = compress_grads_int8(g, err0)
+    rel = float(jnp.linalg.norm(dq["w"] - g["w"]) / jnp.linalg.norm(g["w"]))
+    assert rel < 0.01
+
+
+def test_train_step_with_grad_compression_runs():
+    cfg, params = _tiny()
+    tcfg = TrainConfig(grad_compression="int8_ef")
+    state = init_train_state(params, tcfg)
+    assert "grad_error" in state
+    step = jax.jit(make_train_step(cfg, tcfg))
+    data = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, batch=4,
+                                   seq_len=8))
+    state, m = step(state, data.batch_at(0))
+    assert np.isfinite(float(m["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline.
+# ---------------------------------------------------------------------------
+
+def test_data_random_access_deterministic():
+    cfg = DataConfig(vocab_size=100, batch=4, seq_len=16, seed=9)
+    p1, p2 = DataPipeline(cfg), DataPipeline(cfg)
+    b1, b2 = p1.batch_at(17), p2.batch_at(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_data_labels_shifted():
+    cfg = DataConfig(vocab_size=50, batch=2, seq_len=8, seed=0)
+    b = DataPipeline(cfg).batch_at(0)
+    assert b["tokens"].shape == (2, 8) and b["labels"].shape == (2, 8)
+
+
+def test_data_markov_learnable_structure():
+    """Markov stream must be predictable: successor entropy << uniform."""
+    cfg = DataConfig(vocab_size=64, batch=64, seq_len=32, seed=1)
+    b = DataPipeline(cfg).batch_at(0)
+    toks = np.asarray(b["tokens"])
+    # count bigram diversity: following tokens concentrate on few successors
+    from collections import defaultdict
+    succ = defaultdict(set)
+    for row in toks:
+        for a, c in zip(row[:-1], row[1:]):
+            succ[int(a)].add(int(c))
+    avg_succ = np.mean([len(v) for v in succ.values()])
+    assert avg_succ < 40  # uniform would approach 60+ distinct successors
