@@ -5,8 +5,14 @@ quantized vs compressed per-example latency, where compressed pays the
 layer-by-layer decode cost.  This container is also CPU, so these are real
 wall-clock measurements of the same pipeline (smoke-scale model).
 
-Also measures the microbench the serving engine cares about: dict_decode +
-dequant_matmul throughput vs a dense matmul of the same shape.
+Also measures the microbenches the serving engine cares about:
+  * kernel_latency — dict_decode + dequant_matmul vs a dense matmul.
+  * fused_latency  — the fused decode→dequant→matmul path vs the legacy
+    two-step (``impl='unfused'``) path at 1024² and 4096², with an
+    estimated bytes-moved model alongside wall clock: the fused kernel
+    replaces the 2·N·K dense-weight HBM round-trip with the compressed
+    payload streamed per M-tile, which is the whole point of the
+    megakernel (see kernels/fused_decode_matmul.py).
 """
 from __future__ import annotations
 
@@ -19,9 +25,11 @@ from repro.core.blocked_codec import build_lut
 from repro.core.compressed import pack_linear, quantize_linear
 from repro.core.policy import CompressionPolicy
 from repro.kernels import ops
+from repro.kernels.fused_decode_matmul import DEFAULT_BM
 from repro.serve.engine import build_serve_params, generate
 
-from .common import emit, time_call, trained_tiny_model
+from .common import emit, time_call, trained_tiny_model, \
+    synthetic_trained_weights
 
 
 def serving_latency():
@@ -50,7 +58,7 @@ def kernel_latency():
     ql = quantize_linear(w)
     table = codec.find_frequent_sequences([np.asarray(ql.values)])
     lut = jnp.asarray(build_lut(table))
-    packed = pack_linear(w, table, np.asarray(lut))
+    packed = pack_linear(w, table, np.asarray(lut), tile="auto")
 
     dense = jax.jit(lambda x: x @ w.T)
     quant = jax.jit(lambda x: ops.dequant_matmul(x, ql.values, ql.scale,
@@ -67,9 +75,62 @@ def kernel_latency():
          f"{tc/td:.2f}x dense (decode amortized per call)")
 
 
+def _fused_bytes_model(m, n, k, payload, bm=DEFAULT_BM, tile_n=128,
+                       dtype_bytes=4):
+    """Estimated HBM bytes moved per call (TPU kernel traffic model).
+
+    unfused: compressed payload in, dense uint8 weight written to HBM by
+    dict_decode and read back by dequant_matmul (the 2·N·K round-trip),
+    plus activations/outputs.
+    fused:   compressed payload re-streamed once per M-tile of the grid,
+    output written once; the decoded weight never leaves VMEM.
+    Both matmul grids re-stream x once per N-tile (same 128-wide tiles),
+    so that term is common and the delta is purely the weight traffic:
+    2·N·K dense round-trip vs (M/bm)·payload.  Returns
+    (unfused_total, fused_total, unfused_weight, fused_weight) so callers
+    can report the weight-traffic ratio undiluted by the shared x/y terms.
+    """
+    x_b = -(-n // tile_n) * m * k * dtype_bytes    # per-N-tile x re-stream
+    y_b = m * n * dtype_bytes
+    w_unfused = payload + 2 * n * k
+    w_fused = -(-m // bm) * payload
+    return w_unfused + x_b + y_b, w_fused + x_b + y_b, w_unfused, w_fused
+
+
+def fused_latency():
+    rng = np.random.default_rng(0)
+    m = 256
+    for size in (1024, 4096):
+        n = k = size
+        w = jnp.asarray(synthetic_trained_weights(rng, (n, k)))
+        ql = quantize_linear(w)
+        table = codec.find_frequent_sequences([np.asarray(ql.values)])
+        lut = jnp.asarray(build_lut(table))
+        packed = pack_linear(w, table, np.asarray(lut), tile="auto")
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        # packed is an argument (not a closure constant) so XLA doesn't
+        # constant-fold the decode into the compile.
+        fused = jax.jit(lambda x, p: ops.decode_dequant_matmul(
+            x, p, lut, out_dtype=jnp.float32))
+        unfused = jax.jit(lambda x, p: ops.decode_dequant_matmul(
+            x, p, lut, impl="unfused", out_dtype=jnp.float32))
+        tf = time_call(fused, x, packed, iters=10)
+        tu = time_call(unfused, x, packed, iters=10)
+        ub, fb, uw, fw = _fused_bytes_model(m, n, k, packed.payload_nbytes,
+                                            tile_n=packed.tile_n or 128)
+        tag = f"latency.fused_matmul_{size}x{size}"
+        emit(f"{tag}.unfused_ms", f"{tu*1e3:.2f}",
+             f"two-step decode→matmul, ~{ub/2**20:.1f} MiB moved "
+             f"({uw/2**20:.1f} MiB weight)")
+        emit(f"{tag}.fused_ms", f"{tf*1e3:.2f}",
+             f"{tu/tf:.2f}x unfused, ~{fb/2**20:.1f} MiB moved "
+             f"({fw/2**20:.1f} MiB weight, {uw/fw:.1f}x fewer weight bytes)")
+
+
 def main():
     serving_latency()
     kernel_latency()
+    fused_latency()
 
 
 if __name__ == "__main__":

@@ -67,9 +67,8 @@ def main():
     b, t0 = batch.shape
     max_len = t0 + args.max_new
 
+    # jitted + cached per config — repeated calls reuse the same executable
     prefill, decode_step = make_serve_fns(cfg)
-    prefill = jax.jit(prefill)
-    decode_step = jax.jit(decode_step, static_argnames=())
 
     caches = LM.init_caches(cfg, b, max_len, dtype=jnp.float32)
     t_start = time.perf_counter()

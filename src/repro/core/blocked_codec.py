@@ -170,6 +170,108 @@ def blocked_nbytes(bc: BlockedCompressed, include_lut: bool = False) -> int:
     return n
 
 
+# ---------------------------------------------------------------------------
+# Tile-aligned layout for the fused decode→dequant→matmul megakernel.
+#
+# The fused kernel (repro.kernels.fused_decode_matmul) decodes only the
+# compressed blocks covering the current (tile_n, tile_k) weight tile inside
+# the matmul grid.  That requires each tile to map to a whole number of
+# blocks: we re-order the dense (N, K) stream *tile-major* — tile (j, k)
+# (row-major over the (N/tile_n, K/tile_k) tile grid) is flattened
+# contiguously, so its blocks are the contiguous row range
+# [t·bpt, (t+1)·bpt) of the codes/literals planes, with t = j·n_kt + k and
+# bpt = tile_n·tile_k / block_weights.
+# ---------------------------------------------------------------------------
+
+DEFAULT_TILE_N = 128   # matches dequant_matmul.DEFAULT_BN
+DEFAULT_TILE_K = 512   # matches dequant_matmul.DEFAULT_BK
+
+
+def _pow2_divisor(n: int, cap: int) -> int:
+    """Largest power of two that divides ``n``, capped at ``cap``."""
+    d = n & (-n)  # largest power-of-2 factor
+    return min(d, cap)
+
+
+def _shrink_block_weights(vol: int, block_weights: int, seq_len: int) -> int:
+    """Halve a tile's volume down toward the ``block_weights`` cap while it
+    stays a whole number of ``seq_len`` grams — the single source of truth
+    for the fused layout's actual block size."""
+    bw = vol
+    while bw > block_weights and bw % 2 == 0 and (bw // 2) % seq_len == 0:
+        bw //= 2
+    return bw
+
+
+def choose_fused_tiles(shape: tuple, block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                       seq_len: int = DEFAULT_SEQ_LEN,
+                       max_tile_n: int = DEFAULT_TILE_N,
+                       max_tile_k: int = DEFAULT_TILE_K):
+    """Pick (tile_n, tile_k, block_weights) for the fused-kernel layout.
+
+    Tiles are the largest power-of-two divisors of (N, K) up to the kernel's
+    default matmul block — divisors, not round-ups, so no padding is ever
+    needed and decoded bytes are bit-identical to the linear layout's.
+    Returns None when the tensor cannot host a tile of at least one
+    ``seq_len`` gram (fused layout unavailable; callers fall back to the
+    linear layout + two-step path).
+    """
+    n, k = int(shape[0]), int(shape[1])
+    if n <= 0 or k <= 0:
+        return None
+    tn = _pow2_divisor(n, max_tile_n)
+    tk = _pow2_divisor(k, max_tile_k)
+    vol = tn * tk
+    if vol % seq_len:
+        return None
+    bw = _shrink_block_weights(vol, block_weights, seq_len)
+    if vol % bw or bw % seq_len:
+        return None
+    return tn, tk, bw
+
+
+def tile_stream(w2d: np.ndarray, tile_n: int, tile_k: int) -> np.ndarray:
+    """Re-order a (N, K) array into the tile-major flat byte stream."""
+    n, k = w2d.shape
+    assert n % tile_n == 0 and k % tile_k == 0, (w2d.shape, tile_n, tile_k)
+    return (np.ascontiguousarray(w2d)
+            .reshape(n // tile_n, tile_n, k // tile_k, tile_k)
+            .transpose(0, 2, 1, 3).reshape(-1))
+
+
+def untile_flat(flat, shape: tuple, tile_n: int, tile_k: int):
+    """Inverse of :func:`tile_stream` for (..., N·K) flats (jnp or numpy)."""
+    n, k = shape
+    lead = flat.shape[:-1]
+    x = flat.reshape(lead + (n // tile_n, k // tile_k, tile_n, tile_k))
+    x = jnp.moveaxis(x, -3, -2) if isinstance(flat, jax.Array) else \
+        np.moveaxis(x, -3, -2)
+    return x.reshape(lead + (n, k))
+
+
+def encode_blocked_tiled(weights2d: np.ndarray, table: dict,
+                         lut: np.ndarray | None = None,
+                         tile_n: int = DEFAULT_TILE_N,
+                         tile_k: int = DEFAULT_TILE_K,
+                         block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                         seq_len: int = DEFAULT_SEQ_LEN) -> BlockedCompressed:
+    """Encode a (N, K) uint8 tensor in the fused-kernel tile-major layout.
+
+    ``block_weights`` is a *cap*: the actual block size is shrunk so a tile
+    always holds a whole number of blocks (see :func:`choose_fused_tiles`).
+    """
+    n, k = weights2d.shape
+    vol = tile_n * tile_k
+    bw = _shrink_block_weights(vol, block_weights, seq_len)
+    assert vol % bw == 0 and bw % seq_len == 0, (tile_n, tile_k, bw, seq_len)
+    stream = tile_stream(np.asarray(weights2d, dtype=np.uint8),
+                         tile_n, tile_k)
+    bc = encode_blocked(stream, table, lut=lut, block_weights=bw,
+                        seq_len=seq_len)
+    assert bc.orig_len == n * k  # tiles divide exactly; no codec padding
+    return dataclasses.replace(bc, shape=(n, k))
+
+
 def shard_aligned_block_weights(tensor_cols: int, tp_shards: int,
                                 block_weights: int = DEFAULT_BLOCK_WEIGHTS,
                                 seq_len: int = DEFAULT_SEQ_LEN) -> int:

@@ -82,24 +82,32 @@ class PackedLinear:
     # dense weight must reshard (u8 bytes) instead of the activations
     # (§Perf P2); set from the partition rule table at build/spec time.
     row_parallel: bool = False
+    # Fused-kernel tile layout (core.blocked_codec tile-major ordering):
+    # tile_n > 0 means blocks are grouped per (tile_n, tile_k) weight tile
+    # so the fused decode→dequant→matmul megakernel can stream them; 0 =
+    # linear layout (two-step decode path only).
+    tile_n: int = 0
+    tile_k: int = 0
 
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
         return (((ga("codes"), self.codes), (ga("literals"), self.literals),
                  (ga("nlit"), self.nlit), (ga("scale"), self.scale),
                  (ga("zero"), self.zero)),
-                (self.shape, self.seq_len, self.row_parallel))
+                (self.shape, self.seq_len, self.row_parallel,
+                 self.tile_n, self.tile_k))
 
     def tree_flatten(self):
         return ((self.codes, self.literals, self.nlit, self.scale, self.zero),
-                (self.shape, self.seq_len, self.row_parallel))
+                (self.shape, self.seq_len, self.row_parallel,
+                 self.tile_n, self.tile_k))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         codes, literals, nlit, scale, zero = children
-        shape, seq_len, row_parallel = aux
+        shape, seq_len, row_parallel, tile_n, tile_k = aux
         return cls(codes, literals, nlit, scale, zero, shape, seq_len,
-                   row_parallel)
+                   row_parallel, tile_n, tile_k)
 
     @property
     def payload_nbytes(self) -> int:
@@ -132,7 +140,8 @@ class PackedLinear:
             nlit=on_block_axis(self.nlit, 1),
             scale=self.scale, zero=self.zero,
             shape=self.shape, seq_len=self.seq_len,
-            row_parallel=self.row_parallel)
+            row_parallel=self.row_parallel,
+            tile_n=self.tile_n, tile_k=self.tile_k)
 
     def materialize_int8(self, lut: jax.Array) -> jax.Array:
         """Decode only (uint8 codes of the quantized weight).  Handles
@@ -152,6 +161,10 @@ class PackedLinear:
         flat = bcdc.decode_blocked_jnp(bc)
         per = nb * slots * self.seq_len
         flat = flat.reshape((-1, per))[:, :n_dense]
+        if self.tile_n:  # undo the fused-kernel tile-major ordering
+            return bcdc.untile_flat(flat.reshape(lead + (n_dense,)),
+                                    tuple(self.shape),
+                                    self.tile_n, self.tile_k)
         return flat.reshape(lead + tuple(self.shape))
 
     def materialize(self, lut: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
@@ -320,15 +333,28 @@ def quantize_linear(w: jax.Array, qcfg: QuantConfig | None = None) -> QuantLinea
 def pack_linear(w: jax.Array, table: dict, lut: np.ndarray,
                 qcfg: QuantConfig | None = None,
                 block_weights: int = DEFAULT_BLOCK_WEIGHTS,
-                lit_cap: int | None = None) -> PackedLinear:
+                lit_cap: int | None = None,
+                tile: tuple | None = None) -> PackedLinear:
     """Quantize + blocked-compress a dense weight (host side).
 
     ``lit_cap`` forces a uniform literal capacity (needed when stacking
-    layers); pass None to use the tensor's own max.
+    layers); pass None to use the tensor's own max.  ``tile=(tile_n,
+    tile_k)`` encodes in the fused-megakernel tile-major layout (pass
+    ``"auto"`` to let :func:`blocked_codec.choose_fused_tiles` pick); None
+    keeps the linear layout.
     """
     ql = quantize_linear(w, qcfg)
-    bc = bcdc.encode_blocked(np.asarray(ql.values), table,
-                             lut=lut, block_weights=block_weights)
+    if tile == "auto":
+        picked = bcdc.choose_fused_tiles(w.shape, block_weights)
+        tile = picked[:2] if picked else None
+    if tile is not None:
+        tn, tk = tile
+        bc = bcdc.encode_blocked_tiled(np.asarray(ql.values), table, lut=lut,
+                                       tile_n=tn, tile_k=tk,
+                                       block_weights=block_weights)
+    else:
+        bc = bcdc.encode_blocked(np.asarray(ql.values), table,
+                                 lut=lut, block_weights=block_weights)
     literals = bc.literals
     if lit_cap is not None:
         cur = literals.shape[1]
@@ -338,9 +364,10 @@ def pack_linear(w: jax.Array, table: dict, lut: np.ndarray,
             literals = jnp.concatenate([literals, pad], axis=1)
         elif cur > lit_cap:
             raise ValueError(f"lit_cap {lit_cap} < needed {cur}")
+    tn, tk = tile if tile is not None else (0, 0)
     return PackedLinear(codes=bc.codes, literals=literals, nlit=bc.nlit,
                         scale=ql.scale, zero=ql.zero, shape=tuple(w.shape),
-                        seq_len=bc.seq_len)
+                        seq_len=bc.seq_len, tile_n=tn, tile_k=tk)
 
 
 # ---------------------------------------------------------------------------

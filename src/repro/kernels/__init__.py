@@ -1,12 +1,16 @@
 """Pallas TPU kernels for Tiny-QMoE hot spots (+ jnp oracles in ref.py).
 
-  dequant_matmul  — fused W8A16 dequant × matmul (serving hot path)
-  dict_decode     — blocked dictionary decompression in VMEM
-  flash_attention — block-wise online-softmax attention (prefill)
+  fused_decode_matmul — decode→dequant→matmul megakernel (serving hot path;
+                        compressed blocks decode per tile inside the MXU
+                        loop, the dense weight never touches HBM)
+  dequant_matmul      — fused W8A16 dequant × matmul (quant mode / fallback)
+  dict_decode         — blocked dictionary decompression in VMEM
+  flash_attention     — block-wise online-softmax attention (prefill)
 Use via ``repro.kernels.ops`` which handles padding + backend dispatch.
 """
 from . import ops, ref
-from .ops import dequant_matmul, dict_decode, flash_attention, decode_dequant_matmul
+from .ops import (dequant_matmul, dict_decode, flash_attention,
+                  decode_dequant_matmul)
 
 __all__ = ["ops", "ref", "dequant_matmul", "dict_decode", "flash_attention",
            "decode_dequant_matmul"]

@@ -16,6 +16,15 @@ bf16), plus one running row-sum of x; the affine epilogue applies once per
 output tile.  No per-element dequant multiply inside the K loop at all.
 
 Grid: (M/bm, N/bn, K/bk), K innermost; accumulators live in VMEM scratch.
+
+This kernel serves mode='quant' (dense uint8 weights) and the legacy
+two-step compressed path.  For mode='compressed' the serving hot path is
+``fused_decode_matmul.py``, which runs the SAME grid and affine-epilogue
+math but decodes each (bn, bk) weight tile from its compressed blocks
+inside the kernel — possible because ``core.blocked_codec`` lays blocks
+out tile-major, one whole number of blocks per (tile_n, tile_k) tile.
+Keep the two epilogues in sync: both compute y = s·(Σ x·q − z·Σ x) with
+q exact in bf16.
 """
 from __future__ import annotations
 

@@ -1,0 +1,130 @@
+"""Fused decode→dequant→matmul Pallas TPU megakernel.
+
+Tiny-QMoE's premise is that compressed weights stay compressed until the
+last possible moment.  The two-step path (``dict_decode`` then
+``dequant_matmul``) betrays that on the hot loop: it writes the full dense
+(N, K) uint8 weight to HBM and reads it back for the matmul — 2·N·K bytes
+of HBM traffic per layer call plus a full dense-weight peak-memory spike.
+This kernel fuses the dictionary decode into the matmul tile loop, exactly
+as QMoE fuses its Huffman-style decode into the GPU GEMM:
+
+  grid (M/bm, N/tile_n, K/tile_k), K innermost.  Each grid step
+    1. streams the ``bpt = tile_n·tile_k / block_weights`` compressed
+       blocks covering the current (tile_n, tile_k) weight tile into VMEM
+       (codes + literals; the decode LUT is resident in VMEM for the whole
+       launch, ≤ 64k codes × S bytes),
+    2. decodes them in-register — LUT row-gather for dictionary slots, an
+       in-block escape-rank gather for literal slots, identical math to
+       ``dict_decode._kernel``,
+    3. feeds the decoded uint8 tile straight into the bf16 MXU matmul with
+       the affine epilogue of ``dequant_matmul._kernel``:
+
+           y = s · (Σ_k x·q − z·Σ_k x)      (q ≤ 255 exact in bf16)
+
+The decoded weight never touches HBM: weight traffic drops from 2·N·K
+bytes to the compressed payload, and peak working set is the compressed
+planes + one VMEM tile.  This relies on the tile-major block layout of
+``core.blocked_codec.encode_blocked_tiled`` — tile (j, k) of the
+(N/tile_n, K/tile_k) grid owns the contiguous block rows
+[t·bpt, (t+1)·bpt), t = j·n_kt + k — so the BlockSpec index maps below can
+address a tile's blocks as one rectangular slab.
+
+Oracle: ``ref.fused_decode_matmul`` (same strip-wise structure in f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codec import ESCAPE
+
+DEFAULT_BM = 128
+
+
+def _kernel(x_ref, codes_ref, lit_ref, lut_ref, scale_ref, zero_ref, o_ref,
+            acc_ref, sumx_ref):
+    k_idx = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        sumx_ref[...] = jnp.zeros_like(sumx_ref)
+
+    # --- decode this (tile_n, tile_k) weight tile from its blocks --------
+    codes = codes_ref[...].astype(jnp.int32)              # (bpt, slots)
+    is_esc = codes == ESCAPE
+    safe = jnp.where(is_esc, 0, codes)
+    from_dict = jnp.take(lut_ref[...], safe, axis=0)      # (bpt, slots, S)
+    rank = jnp.clip(jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1,
+                    0, lit_ref.shape[1] - 1)              # (bpt, slots)
+    from_lit = jnp.take_along_axis(
+        lit_ref[...], rank[:, :, None].astype(jnp.int32), axis=1)
+    tile = jnp.where(is_esc[:, :, None], from_lit, from_dict)
+    tn, tk = scale_ref.shape[0], x_ref.shape[1]
+    q = tile.reshape(tn, tk)                              # uint8, never HBM
+
+    # --- matmul + affine epilogue (dequant_matmul math) ------------------
+    x = x_ref[...].astype(jnp.bfloat16)                   # (bm, tk)
+    acc_ref[...] += jax.lax.dot_general(
+        x, q.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bm, tn)
+    sumx_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+
+    @pl.when(k_idx == nk - 1)
+    def _epilogue():
+        s = scale_ref[...].reshape(1, -1)                 # (1, tn)
+        z = zero_ref[...].reshape(1, -1)                  # (1, tn)
+        o_ref[...] = (s * (acc_ref[...] - sumx_ref[...] * z)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "tile_n", "tile_k",
+                                             "bm", "out_dtype", "interpret"))
+def fused_decode_matmul(x: jax.Array, codes: jax.Array, literals: jax.Array,
+                        lut: jax.Array, scale: jax.Array, zero: jax.Array, *,
+                        shape: tuple, tile_n: int, tile_k: int,
+                        bm: int = DEFAULT_BM, out_dtype=jnp.float32,
+                        interpret: bool = False) -> jax.Array:
+    """y = x @ dequant(decode(codes, literals)).T without a dense weight.
+
+    x: (M, K) float, M % bm == 0; codes/literals: tile-major planes for the
+    dense ``shape = (N, K)`` weight; scale/zero: (N, 1) f32.  ``nlit`` is
+    not needed (the escape-rank clip makes over-reads harmless, as in
+    ``dict_decode``).
+    """
+    n, kdim = shape
+    m, k2 = x.shape
+    assert k2 == kdim, (x.shape, shape)
+    assert n % tile_n == 0 and kdim % tile_k == 0, (shape, tile_n, tile_k)
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    nnt, nkt = n // tile_n, kdim // tile_k
+    nb, slots = codes.shape
+    cap, s = literals.shape[1], literals.shape[2]
+    bpt = nb // (nnt * nkt)
+    assert bpt * nnt * nkt == nb and bpt * slots * s == tile_n * tile_k, (
+        codes.shape, literals.shape, shape, tile_n, tile_k)
+
+    grid = (m // bm, nnt, nkt)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, tile_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bpt, slots), lambda i, j, k: (j * nkt + k, 0)),
+            pl.BlockSpec((bpt, cap, s), lambda i, j, k: (j * nkt + k, 0, 0)),
+            pl.BlockSpec(lut.shape, lambda i, j, k: (0, 0)),  # LUT resident
+            pl.BlockSpec((tile_n, 1), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, tile_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, tile_n), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, literals, lut, scale, zero)

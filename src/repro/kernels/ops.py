@@ -20,8 +20,11 @@ from . import ref
 from . import dequant_matmul as _dqmm
 from . import dict_decode as _dd
 from . import flash_attention as _fa
+from . import fused_decode_matmul as _fdm
 
-Impl = str  # 'auto' | 'ref' | 'pallas' | 'pallas_interpret'
+# 'auto' | 'ref' | 'pallas' | 'pallas_interpret' — plus 'unfused' for
+# decode_dequant_matmul only (force the legacy two-step decode→matmul path).
+Impl = str
 
 
 def _use_pallas(impl: Impl) -> tuple[bool, bool]:
@@ -89,10 +92,15 @@ def dict_decode(codes, literals, nlit, lut, *, impl: Impl = "auto",
     ch = chunk or _dd.DEFAULT_CHUNK
     nb = codes.shape[0]
     ch = min(ch, nb)
-    while nb % ch:
-        ch -= 1
-    return _dd.dict_decode(codes, literals, nlit, lut, chunk=ch,
-                           interpret=interpret)
+    # Pad the block axis to a chunk multiple and slice back, instead of
+    # shrinking the chunk to a divisor of nb (which silently degraded to
+    # chunk=1 — one grid step per block — for prime block counts).  Padded
+    # rows decode to LUT row 0 garbage and are dropped by the slice.
+    codes, nb0 = _pad_to(codes, 0, ch)
+    literals, _ = _pad_to(literals, 0, ch)
+    out = _dd.dict_decode(codes, literals, nlit, lut, chunk=ch,
+                          interpret=interpret)
+    return out[:nb0]
 
 
 def flash_attention(q, k, v, *, causal=True, sm_scale=None, q_offset=0,
@@ -110,18 +118,85 @@ def flash_attention(q, k, v, *, causal=True, sm_scale=None, q_offset=0,
                                q_offset=q_offset, interpret=interpret, **kw)
 
 
+def _mesh_device_count() -> int:
+    from repro.sharding.partition import _current_axis_sizes
+    axis_sizes, _ = _current_axis_sizes()
+    n = 1
+    for v in axis_sizes.values():
+        n *= v
+    return n
+
+
 def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
                           impl: Impl = "auto"):
-    """Fused paper path: blocked-decode the weight, then dequant-matmul.
+    """Compressed-weight matmul: the paper's serving hot path.
 
     ``packed`` is a repro.core.compressed.PackedLinear (single layer).
+
+    Dispatch: when the planes carry the tile-major layout
+    (``packed.tile_n > 0``) this routes to the fused decode→dequant→matmul
+    megakernel (``fused_decode_matmul`` on TPU, its strip-scan oracle
+    ``ref.fused_decode_matmul`` elsewhere) — the dense weight never
+    materializes.  ``impl='unfused'`` forces the legacy two-step path
+    (decode to HBM, then ``dequant_matmul``), which also serves as the
+    fallback for linear-layout planes and for sharded meshes (the fused
+    kernel is the single-device on-device-serving path; its planes would
+    need a shard_map wrapper to split the grid across a mesh — see
+    ROADMAP open items).
+    """
+    unfused = impl == "unfused"
+    inner_impl = "auto" if unfused else impl
+    tile_n = getattr(packed, "tile_n", 0)
+    if (not unfused and tile_n and packed.codes.ndim == 2
+            and _mesh_device_count() == 1):
+        return _fused_decode_matmul(x, packed, lut, out_dtype=out_dtype,
+                                    impl=impl)
+    return _decode_dequant_matmul_unfused(x, packed, lut,
+                                          out_dtype=out_dtype,
+                                          impl=inner_impl)
+
+
+def _fused_decode_matmul(x, packed, lut, *, out_dtype, impl: Impl):
+    """Megakernel path — decoded weight tiles live only in VMEM/registers."""
+    use_kernel, interpret = _use_pallas(impl)
+    n, kdim = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, kdim)
+    if not use_kernel:
+        y = ref.fused_decode_matmul(
+            x2, packed.codes, packed.literals, packed.nlit, lut,
+            packed.scale, packed.zero, shape=tuple(packed.shape),
+            tile_n=packed.tile_n, tile_k=packed.tile_k, out_dtype=out_dtype)
+        return y.reshape(*lead, n)
+    bm = min(_fdm.DEFAULT_BM, max(x2.shape[0], 1))
+    x2, m0 = _pad_to(x2, 0, bm)
+    y = _fdm.fused_decode_matmul(
+        x2, packed.codes, packed.literals, lut, packed.scale, packed.zero,
+        shape=tuple(packed.shape), tile_n=packed.tile_n,
+        tile_k=packed.tile_k, bm=bm, out_dtype=out_dtype,
+        interpret=interpret)
+    return y[:m0].reshape(*lead, n)
+
+
+def _decode_dequant_matmul_unfused(x, packed, lut, *, out_dtype,
+                                   impl: Impl):
+    """Legacy two-step path: decode the full weight, then dequant-matmul.
+
+    Pays 2·N·K bytes of dense-weight HBM traffic per call (write decoded,
+    read for the matmul); kept for sharded serving and as the
+    ``impl='unfused'`` baseline the benchmarks compare against.
     """
     from repro.sharding.partition import constrain
     packed = packed.degather()   # gather compressed bytes, not f32 (§Perf D1)
     n, kdim = packed.shape
     wq_flat = dict_decode(packed.codes, packed.literals, packed.nlit, lut,
                           impl=impl)
-    wq = wq_flat.reshape(-1)[: n * kdim].reshape(n, kdim)
+    if getattr(packed, "tile_n", 0):
+        from repro.core.blocked_codec import untile_flat
+        wq = untile_flat(wq_flat.reshape(-1)[: n * kdim], (n, kdim),
+                         packed.tile_n, packed.tile_k)
+    else:
+        wq = wq_flat.reshape(-1)[: n * kdim].reshape(n, kdim)
     if packed.row_parallel:
         # wo/w_down: contraction dim must carry the model sharding — decode
         # leaves rows:model; reshard the u8 weight (not the f32

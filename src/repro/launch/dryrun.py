@@ -133,7 +133,8 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
                                  mesh)
             lutshard = (jax.NamedSharding(mesh, jax.sharding.PartitionSpec())
                         if lut is not None else None)
-            prefill, decode = make_serve_fns(cfg)
+            # raw closures: the dry-run applies its own pjit shardings
+            prefill, decode = make_serve_fns(cfg, jit=False)
             if kind == "prefill":
                 out_cshard = PT.to_named(
                     PT.make_cache_specs(cell.get("out_caches",

@@ -48,9 +48,7 @@ def main():
     toks = data.batch_at(0)["tokens"]
     b, t0 = toks.shape
     caches = LM.init_caches(cfg, b, t0 + args.max_new, dtype=jnp.float32)
-    prefill, decode = make_serve_fns(cfg)
-    prefill = jax.jit(prefill)
-    decode = jax.jit(decode)
+    prefill, decode = make_serve_fns(cfg)   # jitted + cached per config
 
     t = time.perf_counter()
     logits, caches = prefill(sp, lut, {"tokens": toks}, caches)

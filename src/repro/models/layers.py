@@ -4,7 +4,10 @@ Every linear weight is stored ``(out, in)`` and may be a dense array, a
 ``QuantLinear`` (int8) or a ``PackedLinear`` (Tiny-QMoE compressed); the
 ``linear`` dispatcher below routes to the fused kernels, which is how the
 paper's technique becomes a first-class property of *every* architecture in
-the zoo rather than a bolt-on.
+the zoo rather than a bolt-on.  Tile-laid ``PackedLinear`` weights
+(``tile_n > 0``) hit the decode→dequant→matmul megakernel through
+``ops.decode_dequant_matmul`` — the dense weight never materializes; pass
+``impl='unfused'`` to force the legacy two-step path.
 
 Param trees are plain nested dicts so that (a) ``lax.scan`` over stacked
 layers works out of the box, (b) sharding rules match on path names, and

@@ -6,17 +6,22 @@ Pipeline (paper §2.3 "inference", adapted per DESIGN.md §2):
      quantized byte streams, blocked-encode each tensor. Weights now live
      in HBM compressed.
   2. ``prefill`` / ``decode_step`` (device, jit): each layer decodes its
-     weights on demand inside the forward graph (dict_decode → fused
-     dequant-matmul), so peak HBM = compressed model + KV cache + one
-     layer's working set — the paper's "decompress layer by layer",
-     tile-granular on TPU.
+     weights on demand inside the forward graph via the fused
+     decode→dequant→matmul megakernel (kernels/fused_decode_matmul.py),
+     so peak HBM = compressed model + KV cache + one VMEM tile — the
+     paper's "decompress layer by layer", tile-granular on TPU.
+     ``generate`` runs the whole decode phase under one jitted
+     ``lax.scan`` so the kernel executes back-to-back with no per-token
+     host sync or retrace.
 
 Weight modes mirror the paper's evaluation triple:
   dense → "llama3.2-*", quant → "* Quantized", compressed → "* Compressed".
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 from functools import partial
 from typing import Any, Optional
 
@@ -28,6 +33,7 @@ from repro.core import (CompressionPolicy, QuantConfig, build_lut,
                         encode_blocked, find_frequent_sequences,
                         quantize_linear)
 from repro.core.compressed import PackedLinear, QuantLinear
+from repro.core import blocked_codec as bcdc
 from repro.core.blocked_codec import DEFAULT_BLOCK_WEIGHTS
 from repro.models import lm as LM
 from repro.models import encdec as ED
@@ -112,10 +118,21 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
             new_leaves.append(QuantLinear(vals, sc, zr))
             n_bytes["quant"] += int(vals.nbytes + sc.nbytes + zr.nbytes)
         else:
+            # Tile-major layout when the shape admits it, so serving hits
+            # the fused decode→dequant→matmul megakernel; linear layout
+            # (tile 0×0) otherwise → two-step fallback path.
+            tiles = bcdc.choose_fused_tiles(leaf.shape[-2:], bw)
+            tn, tk = tiles[:2] if tiles else (0, 0)
             # encode each sub-tensor with a uniform literal capacity
-            bcs = [encode_blocked(np.asarray(q.values, dtype=np.uint8),
-                                  table, lut=np.asarray(lut),
-                                  block_weights=bw) for q in qls]
+            if tiles:
+                bcs = [bcdc.encode_blocked_tiled(
+                    np.asarray(q.values, dtype=np.uint8), table,
+                    lut=np.asarray(lut), tile_n=tn, tile_k=tk,
+                    block_weights=bw) for q in qls]
+            else:
+                bcs = [encode_blocked(np.asarray(q.values, dtype=np.uint8),
+                                      table, lut=np.asarray(lut),
+                                      block_weights=bw) for q in qls]
             cap = max(bc.literals.shape[1] for bc in bcs)
             def padlit(bc):
                 cur = bc.literals.shape[1]
@@ -143,7 +160,8 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
             pl = PackedLinear(codes, lits, nlit, sc, zr,
                               shape=tuple(leaf.shape[-2:]),
                               row_parallel=is_row_parallel(
-                                  clean_keystr(jax.tree_util.keystr(path))))
+                                  clean_keystr(jax.tree_util.keystr(path))),
+                              tile_n=tn, tile_k=tk)
             new_leaves.append(pl)
             n_bytes["compressed"] += pl.payload_nbytes + int(
                 sc.nbytes + zr.nbytes)
@@ -160,12 +178,37 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
 # jit-able step functions.
 # ---------------------------------------------------------------------------
 
-def make_serve_fns(cfg):
-    """Returns (prefill, decode_step) closures for jit/pjit.
+# Python-body execution counts of the serve closures — a body runs once per
+# jit (re)trace, so tests can assert the decode loop traces once instead of
+# once per token.  Keyed by closure name.
+TRACE_COUNTS = collections.Counter()
+
+
+def make_serve_fns(cfg, *, jit: bool = True):
+    """Returns (prefill, decode_step) for serving.
 
     prefill(params, lut, tokens_or_embeds, caches) -> (last_logits, caches)
     decode_step(params, lut, token, caches, pos) -> (logits, caches)
+
+    By default the closures come back jit-compiled and cached per config
+    (``lut``/``params`` are ordinary traced arguments), so repeated callers
+    — ``examples/serve_batched.py``, ``benchmarks/latency.py`` — never
+    re-trace per call.  ``jit=False`` returns the raw closures for callers
+    that apply their own pjit shardings (launch/dryrun) or embed the step
+    in a larger traced computation (the ``generate`` scan loop).
     """
+    if jit:
+        return _jitted_serve_fns(cfg)
+    return _raw_serve_fns(cfg)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_serve_fns(cfg):
+    prefill, decode_step = _raw_serve_fns(cfg)
+    return jax.jit(prefill), jax.jit(decode_step)
+
+
+def _raw_serve_fns(cfg):
     fam = cfg.family
 
     def _last_logits(params, hidden, lut=None):
@@ -180,24 +223,28 @@ def make_serve_fns(cfg):
 
     if fam == "encdec":
         def prefill(params, lut, batch, caches):
+            TRACE_COUNTS["prefill"] += 1
             hidden, new_caches = ED.forward(
                 params, cfg, batch["enc_embeds"], batch["tokens"],
                 caches=caches, pos=0, lut=lut, return_hidden=True)
             return _last_logits(params, hidden, lut), new_caches
 
         def decode_step(params, lut, token, caches, pos):
+            TRACE_COUNTS["decode_step"] += 1
             logits, new_caches = ED.decode_step(params, cfg, token, caches,
                                                 pos, lut=lut)
             return logits[:, -1], new_caches
         return prefill, decode_step
 
     def prefill(params, lut, batch, caches):
+        TRACE_COUNTS["prefill"] += 1
         hidden, new_caches, _ = LM.forward(
             params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
             caches=caches, pos=0, lut=lut, return_hidden=True)
         return _last_logits(params, hidden, lut), new_caches
 
     def decode_step(params, lut, token, caches, pos):
+        TRACE_COUNTS["decode_step"] += 1
         logits, new_caches, _ = LM.forward(params, cfg, token, caches=caches,
                                            pos=pos, lut=lut)
         return logits[:, -1], new_caches
@@ -205,30 +252,54 @@ def make_serve_fns(cfg):
     return prefill, decode_step
 
 
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _decode_loop(cfg, steps: int, temperature: float,
+                 params, lut, tok0, caches, pos0, key):
+    """``steps`` decode steps under one ``lax.scan`` — a single trace and a
+    single device program for the whole decode phase, instead of one
+    host-synced dispatch (and, un-jitted, one retrace) per token."""
+    TRACE_COUNTS["decode_loop"] += 1
+    _, decode_step = _raw_serve_fns(cfg)
+    sample = temperature > 0 and key is not None
+
+    def step(carry, _):
+        tok, caches, pos, key = carry
+        logits, caches = decode_step(params, lut, tok, caches, pos)
+        if sample:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(
+                sub, logits / temperature, axis=-1)[:, None].astype(tok.dtype)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(tok.dtype)
+        return (nxt, caches, pos + 1, key), nxt
+
+    init = (tok0, caches, jnp.asarray(pos0, jnp.int32), key)
+    _, toks = jax.lax.scan(step, init, None, length=steps)
+    return jnp.swapaxes(toks[..., 0], 0, 1)        # (steps, B, 1) -> (B, steps)
+
+
 def generate(params, cfg, tokens, *, lut=None, max_new: int = 16,
              max_len: int | None = None, temperature: float = 0.0,
              key=None, embeds=None):
-    """Greedy/sampled generation loop (examples + accuracy benchmarks)."""
+    """Greedy/sampled generation (examples + accuracy benchmarks).
+
+    Prefill runs once under jit; the decode phase is a single jitted
+    ``lax.scan`` over ``decode_step`` (see ``_decode_loop``), so compressed
+    layers hit the fused decode→dequant→matmul kernel back-to-back with no
+    per-token host sync or retrace.
+    """
+    if max_new <= 0:
+        return tokens
     b, t0 = tokens.shape
     extra = embeds.shape[1] if embeds is not None else 0
     max_len = max_len or (t0 + extra + max_new)
     caches = LM.init_caches(cfg, b, max_len)
-    prefill, decode_step = make_serve_fns(cfg)
+    prefill, _ = make_serve_fns(cfg)
     logits, caches = prefill(params, lut,
                              {"tokens": tokens, "embeds": embeds}, caches)
-    out = [tokens]
-    pos = t0 + extra
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
-    for i in range(max_new):
-        out.append(tok)
-        if i == max_new - 1:
-            break
-        logits, caches = decode_step(params, lut, tok, caches, pos)
-        if temperature > 0 and key is not None:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / temperature, axis=-1)[:, None].astype(tokens.dtype)
-        else:
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
-        pos += 1
-    return jnp.concatenate(out, axis=1)
+    tok0 = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
+    if max_new <= 1:
+        return jnp.concatenate([tokens, tok0], axis=1)
+    toks = _decode_loop(cfg, max_new - 1, float(temperature),
+                        params, lut, tok0, caches, t0 + extra, key)
+    return jnp.concatenate([tokens, tok0, toks.astype(tokens.dtype)], axis=1)

@@ -107,6 +107,12 @@ def _resolve_axis(tag, scfg: ShardingConfig, mesh_axes: tuple):
                 axes.append(AXIS_POD)
         if AXIS_DATA in mesh_axes:
             axes.append(AXIS_DATA)
+        # collapse singletons to the bare axis name: P('data') and
+        # P(('data',)) mean the same sharding but do not compare
+        # equal, and specs built here are compared against
+        # bare-name specs (tests, spec plumbing)
+        if len(axes) == 1:
+            return axes[0]
         return tuple(axes) if axes else None
     raise ValueError(tag)
 

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # property tests; skip when absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core import codec, blocked_codec, lzw

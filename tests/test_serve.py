@@ -112,6 +112,59 @@ def test_prefill_decode_consistency_compressed(setup):
                                rtol=2e-2, atol=2e-3)
 
 
+def test_generate_decode_loop_single_trace(setup):
+    """The decode phase must run under one lax.scan trace — the per-token
+    Python loop used to retrace (and host-sync) every step."""
+    from repro.serve import engine
+    cfg, params, toks = setup
+    engine.TRACE_COUNTS.clear()
+    out = generate(params, cfg, toks, max_new=12)
+    assert out.shape == (2, 22)
+    # decode_step's Python body runs only while tracing; one scanned trace
+    # executes it a small constant number of times (abstract eval + lower),
+    # never once per generated token.
+    assert 0 < engine.TRACE_COUNTS["decode_step"] < 5, \
+        dict(engine.TRACE_COUNTS)
+    assert engine.TRACE_COUNTS["decode_loop"] == 1, \
+        dict(engine.TRACE_COUNTS)
+    # same shapes again -> fully cached, no retrace at all
+    engine.TRACE_COUNTS.clear()
+    generate(params, cfg, toks, max_new=12)
+    assert engine.TRACE_COUNTS["decode_loop"] == 0, \
+        dict(engine.TRACE_COUNTS)
+    assert engine.TRACE_COUNTS["decode_step"] == 0
+
+
+def test_make_serve_fns_jitted_and_cached(setup):
+    """Default closures are jit-wrapped and cached per config, so repeated
+    callers share one executable; jit=False returns raw closures."""
+    cfg, params, toks = setup
+    p1, d1 = make_serve_fns(cfg)
+    p2, d2 = make_serve_fns(cfg)
+    assert p1 is p2 and d1 is d2
+    praw, draw = make_serve_fns(cfg, jit=False)
+    assert praw is not p1
+    from repro.serve import engine
+    engine.TRACE_COUNTS.clear()
+    from repro.models import lm as LM
+    caches = LM.init_caches(cfg, 2, 14, dtype=jnp.float32)
+    logits1, c1 = p1(params, None, {"tokens": toks}, caches)
+    logits2, _ = p1(params, None, {"tokens": toks}, caches)
+    assert engine.TRACE_COUNTS["prefill"] <= 1  # 2nd call: no retrace
+    np.testing.assert_array_equal(np.asarray(logits1), np.asarray(logits2))
+
+
+def test_generate_sampled_scan_matches_shapes(setup):
+    cfg, params, toks = setup
+    out = generate(params, cfg, toks, max_new=6, temperature=0.8,
+                   key=jax.random.PRNGKey(3))
+    assert out.shape == (2, 16)
+    # deterministic under the same key
+    out2 = generate(params, cfg, toks, max_new=6, temperature=0.8,
+                    key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
 def test_serve_stats_report_compression(setup):
     cfg, params, toks = setup
     sc = build_serve_params(params, CompressionPolicy(mode="compressed",
