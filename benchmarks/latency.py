@@ -16,12 +16,14 @@ Also measures the microbenches the serving engine cares about:
 """
 from __future__ import annotations
 
+import json
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import codec
-from repro.core.blocked_codec import build_lut
+from repro.core.blocked_codec import build_lut, choose_fused_tiles
 from repro.core.compressed import pack_linear, quantize_linear
 from repro.core.policy import CompressionPolicy
 from repro.kernels import ops
@@ -97,7 +99,9 @@ def _fused_bytes_model(m, n, k, payload, bm=DEFAULT_BM, tile_n=128,
     return w_unfused + x_b + y_b, w_fused + x_b + y_b, w_unfused, w_fused
 
 
-def fused_latency():
+def fused_latency(rows: list | None = None):
+    """Single-device fused vs unfused.  Appends machine-readable rows to
+    ``rows`` (the BENCH_latency.json payload) alongside the CSV emits."""
     rng = np.random.default_rng(0)
     m = 256
     for size in (1024, 4096):
@@ -125,12 +129,96 @@ def fused_latency():
         emit(f"{tag}.fused_ms", f"{tf*1e3:.2f}",
              f"{tu/tf:.2f}x unfused, ~{fb/2**20:.1f} MiB moved "
              f"({fw/2**20:.1f} MiB weight, {uw/fw:.1f}x fewer weight bytes)")
+        if rows is not None:
+            common = dict(bench="fused_matmul", m=m, n=n, k=k, devices=1,
+                          mesh=None)
+            rows.append(dict(common, path="unfused", wall_ms=tu * 1e3,
+                             est_bytes_moved=ub, est_weight_bytes=uw))
+            rows.append(dict(common, path="fused", wall_ms=tf * 1e3,
+                             est_bytes_moved=fb, est_weight_bytes=fw,
+                             speedup_vs_unfused=tu / tf))
+
+
+def sharded_fused_latency(rows: list | None = None):
+    """Shard-mapped fused vs unfused on a (data, model) mesh over the host
+    devices.  Needs >1 device (CI exports
+    XLA_FLAGS=--xla_force_host_platform_device_count=8); on a single
+    device it emits a skip marker so the JSON schema stays stable."""
+    from repro.sharding import partition as PT
+
+    ndev = jax.device_count()
+    if ndev < 2:
+        emit("latency.sharded_fused.skipped", "1", "single device")
+        if rows is not None:
+            rows.append(dict(bench="fused_matmul", devices=ndev, mesh=None,
+                             path="fused_shard_map", skipped="single device"))
+        return
+    msize = min(4, ndev)
+    dsize = ndev // msize
+    mesh = jax.make_mesh((dsize, msize), ("data", "model"))
+    rng = np.random.default_rng(0)
+    m, size = 256, 1024
+    n = k = size
+    w = jnp.asarray(synthetic_trained_weights(rng, (n, k)))
+    ql = quantize_linear(w)
+    table = codec.find_frequent_sequences([np.asarray(ql.values)])
+    lut = jnp.asarray(build_lut(table))
+    picked = choose_fused_tiles((n, k), shards=(msize, 1))
+    packed = pack_linear(w, table, np.asarray(lut), tile=picked[:2])
+    if (n // packed.tile_n) % msize != 0:
+        # odd device counts (3, 5, ...) where the out-tile bands cannot
+        # split over the model axis: record the skip, don't crash the
+        # JSON artifact
+        emit("latency.sharded_fused.skipped", "1",
+             f"out-tiles !% model={msize}")
+        if rows is not None:
+            rows.append(dict(bench="fused_matmul", devices=ndev,
+                             mesh=[dsize, msize], path="fused_shard_map",
+                             skipped=f"out-tiles !% model={msize}"))
+        return
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    with mesh, PT.active_mesh(mesh):
+        fused = jax.jit(lambda x, p: ops.decode_dequant_matmul(
+            x, p, lut, out_dtype=jnp.float32))
+        unfused = jax.jit(lambda x, p: ops.decode_dequant_matmul(
+            x, p, lut, impl="unfused", out_dtype=jnp.float32))
+        ops.DISPATCH_COUNTS.clear()
+        tf = time_call(fused, x, packed, iters=10)
+        tu = time_call(unfused, x, packed, iters=10)
+        assert ops.DISPATCH_COUNTS["fused_shard_map"] >= 1, \
+            dict(ops.DISPATCH_COUNTS)
+    tag = f"latency.sharded_fused_matmul_{size}x{size}.mesh{dsize}x{msize}"
+    emit(f"{tag}.unfused_ms", f"{tu*1e3:.2f}", "two-step under mesh")
+    emit(f"{tag}.fused_ms", f"{tf*1e3:.2f}",
+         f"{tu/tf:.2f}x unfused, shard-mapped megakernel")
+    if rows is not None:
+        common = dict(bench="fused_matmul", m=m, n=n, k=k, devices=ndev,
+                      mesh=[dsize, msize])
+        rows.append(dict(common, path="unfused", wall_ms=tu * 1e3))
+        rows.append(dict(common, path="fused_shard_map", wall_ms=tf * 1e3,
+                         speedup_vs_unfused=tu / tf))
+
+
+def latency_json(path: str = "BENCH_latency.json"):
+    """Machine-readable latency artifact: fused vs unfused, single-device
+    vs shard-mapped — the seed of the perf trajectory CI tracks."""
+    rows: list = []
+    fused_latency(rows)
+    sharded_fused_latency(rows)
+    payload = {"schema": 1, "bench": "latency",
+               "backend": jax.default_backend(),
+               "host_devices": jax.device_count(), "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit("latency.json_rows", str(len(rows)), path)
+    return payload
 
 
 def main():
     serving_latency()
     kernel_latency()
     fused_latency()
+    sharded_fused_latency()
 
 
 if __name__ == "__main__":

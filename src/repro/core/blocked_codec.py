@@ -206,7 +206,8 @@ def _shrink_block_weights(vol: int, block_weights: int, seq_len: int) -> int:
 def choose_fused_tiles(shape: tuple, block_weights: int = DEFAULT_BLOCK_WEIGHTS,
                        seq_len: int = DEFAULT_SEQ_LEN,
                        max_tile_n: int = DEFAULT_TILE_N,
-                       max_tile_k: int = DEFAULT_TILE_K):
+                       max_tile_k: int = DEFAULT_TILE_K,
+                       shards: tuple = (1, 1)):
     """Pick (tile_n, tile_k, block_weights) for the fused-kernel layout.
 
     Tiles are the largest power-of-two divisors of (N, K) up to the kernel's
@@ -215,10 +216,23 @@ def choose_fused_tiles(shape: tuple, block_weights: int = DEFAULT_BLOCK_WEIGHTS,
     Returns None when the tensor cannot host a tile of at least one
     ``seq_len`` gram (fused layout unavailable; callers fall back to the
     linear layout + two-step path).
+
+    ``shards=(sn, sk)``: intended mesh sharding of the dense dims.  Tiles
+    are chosen to divide the *per-shard* dims (n/sn, k/sk) so the
+    shard-mapped fused path can split the tile-major block axis along
+    whole out-tile bands (see ``kernels.ops``); a per-shard divisor also
+    divides the full dim, so the single-device fused path is unaffected.
+    A shard count that does not divide its dim is ignored (that axis
+    cannot take the sharded fused path anyway).
     """
     n, k = int(shape[0]), int(shape[1])
     if n <= 0 or k <= 0:
         return None
+    sn, sk = int(shards[0]) or 1, int(shards[1]) or 1
+    if sn > 1 and n % sn == 0:
+        n //= sn
+    if sk > 1 and k % sk == 0:
+        k //= sk
     tn = _pow2_divisor(n, max_tile_n)
     tk = _pow2_divisor(k, max_tile_k)
     vol = tn * tk

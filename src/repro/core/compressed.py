@@ -197,6 +197,12 @@ class TiledPackedLinear:
       literals_t uint8 [tiles, nb, cap, S]
       nlit_t     int32 [tiles, nb]
       scale/zero f32   [out, 1]
+
+    ``tile_n/tile_k > 0``: each column tile is encoded in the fused-kernel
+    tile-major layout (``blocked_codec.encode_blocked_tiled`` over the
+    (out, in/tiles) sub-weight), so the shard-mapped fused megakernel can
+    run each device's resident tile without materializing it; 0 = linear
+    per-tile layout (dense-materialize 2D-TP path only).
     """
 
     codes: jax.Array
@@ -206,23 +212,28 @@ class TiledPackedLinear:
     zero: jax.Array
     shape: tuple          # static (out, in) of the dense weight
     seq_len: int = DEFAULT_SEQ_LEN
+    tile_n: int = 0
+    tile_k: int = 0
 
     def tree_flatten_with_keys(self):
         ga = jax.tree_util.GetAttrKey
         return (((ga("codes_t"), self.codes),
                  (ga("literals_t"), self.literals),
                  (ga("nlit_t"), self.nlit), (ga("scale"), self.scale),
-                 (ga("zero"), self.zero)), (self.shape, self.seq_len))
+                 (ga("zero"), self.zero)),
+                (self.shape, self.seq_len, self.tile_n, self.tile_k))
 
     def tree_flatten(self):
         return ((self.codes, self.literals, self.nlit, self.scale,
-                 self.zero), (self.shape, self.seq_len))
+                 self.zero),
+                (self.shape, self.seq_len, self.tile_n, self.tile_k))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         codes, literals, nlit, scale, zero = children
-        shape, seq_len = aux
-        return cls(codes, literals, nlit, scale, zero, shape, seq_len)
+        shape, seq_len, tile_n, tile_k = aux
+        return cls(codes, literals, nlit, scale, zero, shape, seq_len,
+                   tile_n, tile_k)
 
     @property
     def tiles(self) -> int:
@@ -250,6 +261,9 @@ class TiledPackedLinear:
         flat = bcdc.decode_blocked_jnp(bc)
         per_tile = nb * slots * self.seq_len
         flat = flat.reshape((-1, tiles, per_tile))[..., : out * in_t]
+        if self.tile_n:  # undo the per-tile fused tile-major ordering
+            flat = bcdc.untile_flat(flat, (out, in_t), self.tile_n,
+                                    self.tile_k)
         w = flat.reshape(lead + (tiles, out, in_t))
         w = jnp.moveaxis(w, -3, -2)                      # (..., out, tiles, in_t)
         return w.reshape(lead + (out, in_full))
@@ -259,52 +273,101 @@ class TiledPackedLinear:
         return ((w - self.zero) * self.scale).astype(dtype)
 
 
+def encode_tiled_planes(vals: np.ndarray, table: dict, lut: np.ndarray,
+                        tiles: int,
+                        block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                        tile=None, shards: tuple = (1, 1)):
+    """Encode a quantized (out, in) uint8 tensor as per-column-tile planes.
+
+    Returns ``(bcs, tile_n, tile_k)`` — one BlockedCompressed per column
+    tile (literal caps NOT yet unified; callers pad to a shared cap).
+    ``tile=(tn, tk)`` or ``"auto"`` selects the fused-kernel tile-major
+    layout per tile; ``shards=(model_shards, 1)`` makes the auto choice
+    divide the per-model-shard out dim (see
+    :func:`blocked_codec.choose_fused_tiles`).  ``tile=None`` keeps the
+    legacy linear per-tile layout (tile_n = tile_k = 0).
+    """
+    out, in_full = vals.shape
+    assert in_full % tiles == 0, (vals.shape, tiles)
+    in_t = in_full // tiles
+    if tile == "auto":
+        picked = bcdc.choose_fused_tiles((out, in_t), block_weights,
+                                         shards=shards)
+        tile = picked[:2] if picked else None
+    bw = min(block_weights, ((out * in_t) // DEFAULT_SEQ_LEN)
+             * DEFAULT_SEQ_LEN) or DEFAULT_SEQ_LEN
+    bcs = []
+    for t in range(tiles):
+        sub = np.ascontiguousarray(vals[:, t * in_t:(t + 1) * in_t])
+        if tile is not None:
+            bcs.append(bcdc.encode_blocked_tiled(
+                sub, table, lut=lut, tile_n=tile[0], tile_k=tile[1],
+                block_weights=bw))
+        else:
+            bcs.append(bcdc.encode_blocked(sub, table, lut=lut,
+                                           block_weights=bw))
+    tn, tk = tile if tile is not None else (0, 0)
+    return bcs, tn, tk
+
+
+def pad_literals(literals: jax.Array, cap: int) -> jax.Array:
+    """Pad a (..., cur_cap, S) literal plane up to a uniform capacity."""
+    cur = literals.shape[-2]
+    if cur > cap:
+        raise ValueError(f"lit_cap {cap} < needed {cur}")
+    if cur == cap:
+        return literals
+    widths = [(0, 0)] * literals.ndim
+    widths[-2] = (0, cap - cur)
+    return jnp.pad(literals, widths)
+
+
 def pack_linear_tiled(w: jax.Array, table: dict, lut: np.ndarray,
                       tiles: int, qcfg: QuantConfig | None = None,
                       block_weights: int = DEFAULT_BLOCK_WEIGHTS,
-                      lit_cap: int | None = None) -> TiledPackedLinear:
-    """Quantize + encode each column tile separately (host side)."""
-    out, in_full = w.shape
-    assert in_full % tiles == 0, (w.shape, tiles)
-    in_t = in_full // tiles
+                      lit_cap: int | None = None,
+                      tile=None, shards: tuple = (1, 1)) -> TiledPackedLinear:
+    """Quantize + encode each column tile separately (host side).
+
+    ``tile``/``shards`` select the fused tile-major per-tile layout (see
+    :func:`encode_tiled_planes`); the default keeps the linear layout.
+    """
     ql = quantize_linear(w, qcfg)
-    vals = np.asarray(ql.values, dtype=np.uint8)
-    bw = min(block_weights, ((out * in_t) // DEFAULT_SEQ_LEN)
-             * DEFAULT_SEQ_LEN) or DEFAULT_SEQ_LEN
-    bcs = [bcdc.encode_blocked(
-        np.ascontiguousarray(vals[:, t * in_t:(t + 1) * in_t]), table,
-        lut=lut, block_weights=bw) for t in range(tiles)]
+    bcs, tn, tk = encode_tiled_planes(
+        np.asarray(ql.values, dtype=np.uint8), table, lut, tiles,
+        block_weights=block_weights, tile=tile, shards=shards)
     cap = lit_cap if lit_cap is not None else max(
         bc.literals.shape[1] for bc in bcs)
-
-    def padlit(bc):
-        cur = bc.literals.shape[1]
-        if cur > cap:
-            raise ValueError(f"lit_cap {cap} < needed {cur}")
-        if cur == cap:
-            return bc.literals
-        pad = jnp.zeros((bc.literals.shape[0], cap - cur,
-                         bc.literals.shape[2]), jnp.uint8)
-        return jnp.concatenate([bc.literals, pad], axis=1)
-
     return TiledPackedLinear(
         codes=jnp.stack([bc.codes for bc in bcs]),
-        literals=jnp.stack([padlit(bc) for bc in bcs]),
+        literals=jnp.stack([pad_literals(bc.literals, cap) for bc in bcs]),
         nlit=jnp.stack([bc.nlit for bc in bcs]),
         scale=ql.scale, zero=ql.zero,
-        shape=tuple(w.shape), seq_len=DEFAULT_SEQ_LEN)
+        shape=tuple(w.shape), seq_len=DEFAULT_SEQ_LEN,
+        tile_n=tn, tile_k=tk)
 
 
 def planned_tiled_specs(shape: tuple, tiles: int, *, stacked: tuple = (),
                         block_weights: int = DEFAULT_BLOCK_WEIGHTS,
                         seq_len: int = DEFAULT_SEQ_LEN,
-                        lit_cap_frac: float = 0.25) -> TiledPackedLinear:
-    """ShapeDtypeStruct stand-in for a TiledPackedLinear."""
+                        lit_cap_frac: float = 0.25,
+                        tile_n: int = 0,
+                        tile_k: int = 0) -> TiledPackedLinear:
+    """ShapeDtypeStruct stand-in for a TiledPackedLinear.
+
+    ``tile_n/tile_k`` mirror the fused tile-major layout of
+    :func:`pack_linear_tiled` (block size shrunk to divide the tile
+    volume); 0 keeps the linear per-tile layout.
+    """
     out, in_full = shape
     in_t = in_full // tiles
     n = out * in_t
     bw = min(block_weights, (n // seq_len) * seq_len) or seq_len
-    nb = -(-n // bw)
+    if tile_n:
+        bw = bcdc._shrink_block_weights(tile_n * tile_k, bw, seq_len)
+        nb = n // bw
+    else:
+        nb = -(-n // bw)
     slots = bw // seq_len
     cap = max(1, int(slots * lit_cap_frac))
     sds = jax.ShapeDtypeStruct
@@ -314,7 +377,7 @@ def planned_tiled_specs(shape: tuple, tiles: int, *, stacked: tuple = (),
         nlit=sds(stacked + (tiles, nb), jnp.int32),
         scale=sds(stacked + (out, 1), jnp.float32),
         zero=sds(stacked + (out, 1), jnp.float32),
-        shape=tuple(shape), seq_len=seq_len)
+        shape=tuple(shape), seq_len=seq_len, tile_n=tile_n, tile_k=tile_k)
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,9 @@ of HBM traffic per layer call plus a full dense-weight peak-memory spike.
 This kernel fuses the dictionary decode into the matmul tile loop, exactly
 as QMoE fuses its Huffman-style decode into the GPU GEMM:
 
-  grid (M/bm, N/tile_n, K/tile_k), K innermost.  Each grid step
+  grid (M/bm, N/tile_n, G, K/(G·tile_k)), K innermost (G = optional
+  column-group axis for shard-local TiledPackedLinear stacks, 1 for a
+  plain PackedLinear).  Each grid step
     1. streams the ``bpt = tile_n·tile_k / block_weights`` compressed
        blocks covering the current (tile_n, tile_k) weight tile into VMEM
        (codes + literals; the decode LUT is resident in VMEM for the whole
@@ -47,23 +49,27 @@ DEFAULT_BM = 128
 
 def _kernel(x_ref, codes_ref, lit_ref, lut_ref, scale_ref, zero_ref, o_ref,
             acc_ref, sumx_ref):
-    k_idx = pl.program_id(2)
-    nk = pl.num_programs(2)
+    g_idx = pl.program_id(2)
+    k_idx = pl.program_id(3)
+    ng = pl.num_programs(2)
+    nk = pl.num_programs(3)
 
-    @pl.when(k_idx == 0)
+    @pl.when((g_idx == 0) & (k_idx == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         sumx_ref[...] = jnp.zeros_like(sumx_ref)
 
     # --- decode this (tile_n, tile_k) weight tile from its blocks --------
-    codes = codes_ref[...].astype(jnp.int32)              # (bpt, slots)
+    codes = codes_ref[...].astype(jnp.int32)              # (1, bpt, slots)
+    codes = codes.reshape(codes.shape[-2:])               # (bpt, slots)
+    lits = lit_ref[...].reshape(lit_ref.shape[-3:])       # (bpt, cap, S)
     is_esc = codes == ESCAPE
     safe = jnp.where(is_esc, 0, codes)
     from_dict = jnp.take(lut_ref[...], safe, axis=0)      # (bpt, slots, S)
     rank = jnp.clip(jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1,
-                    0, lit_ref.shape[1] - 1)              # (bpt, slots)
+                    0, lits.shape[1] - 1)                 # (bpt, slots)
     from_lit = jnp.take_along_axis(
-        lit_ref[...], rank[:, :, None].astype(jnp.int32), axis=1)
+        lits, rank[:, :, None].astype(jnp.int32), axis=1)
     tile = jnp.where(is_esc[:, :, None], from_lit, from_dict)
     tn, tk = scale_ref.shape[0], x_ref.shape[1]
     q = tile.reshape(tn, tk)                              # uint8, never HBM
@@ -75,7 +81,7 @@ def _kernel(x_ref, codes_ref, lit_ref, lut_ref, scale_ref, zero_ref, o_ref,
         preferred_element_type=jnp.float32)               # (bm, tn)
     sumx_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
 
-    @pl.when(k_idx == nk - 1)
+    @pl.when((g_idx == ng - 1) & (k_idx == nk - 1))
     def _epilogue():
         s = scale_ref[...].reshape(1, -1)                 # (1, tn)
         z = zero_ref[...].reshape(1, -1)                  # (1, tn)
@@ -96,33 +102,52 @@ def fused_decode_matmul(x: jax.Array, codes: jax.Array, literals: jax.Array,
     dense ``shape = (N, K)`` weight; scale/zero: (N, 1) f32.  ``nlit`` is
     not needed (the escape-rank clip makes over-reads harmless, as in
     ``dict_decode``).
+
+    Column groups (the shard-local 2D-TP case): codes may carry a leading
+    group axis — ``codes (G, nb, slots)``, ``literals (G, nb, cap, S)`` —
+    where group g holds the tile-major planes of the (N, K/G) sub-weight
+    covering x columns [g·K/G, (g+1)·K/G).  The grid grows a group
+    dimension between N-tiles and K-strips, so the accumulator sweeps
+    every (g, k) strip of an output tile before the affine epilogue fires
+    once — one kernel launch per device for a whole TiledPackedLinear
+    shard (a stack of column-tile planes), no per-tile HBM round trips.
+    2-D codes are treated as G = 1.
     """
     n, kdim = shape
     m, k2 = x.shape
     assert k2 == kdim, (x.shape, shape)
-    assert n % tile_n == 0 and kdim % tile_k == 0, (shape, tile_n, tile_k)
+    if codes.ndim == 2:
+        codes = codes[None]
+        literals = literals[None]
+    groups = codes.shape[0]
+    assert kdim % groups == 0, (shape, groups)
+    kg = kdim // groups
+    assert n % tile_n == 0 and kg % tile_k == 0, (shape, groups,
+                                                  tile_n, tile_k)
     bm = min(bm, m)
     assert m % bm == 0, (m, bm)
-    nnt, nkt = n // tile_n, kdim // tile_k
-    nb, slots = codes.shape
-    cap, s = literals.shape[1], literals.shape[2]
+    nnt, nkt = n // tile_n, kg // tile_k
+    _, nb, slots = codes.shape
+    cap, s = literals.shape[2], literals.shape[3]
     bpt = nb // (nnt * nkt)
     assert bpt * nnt * nkt == nb and bpt * slots * s == tile_n * tile_k, (
         codes.shape, literals.shape, shape, tile_n, tile_k)
 
-    grid = (m // bm, nnt, nkt)
+    grid = (m // bm, nnt, groups, nkt)
     return pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, tile_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bpt, slots), lambda i, j, k: (j * nkt + k, 0)),
-            pl.BlockSpec((bpt, cap, s), lambda i, j, k: (j * nkt + k, 0, 0)),
-            pl.BlockSpec(lut.shape, lambda i, j, k: (0, 0)),  # LUT resident
-            pl.BlockSpec((tile_n, 1), lambda i, j, k: (j, 0)),
-            pl.BlockSpec((tile_n, 1), lambda i, j, k: (j, 0)),
+            pl.BlockSpec((bm, tile_k), lambda i, j, g, k: (i, g * nkt + k)),
+            pl.BlockSpec((1, bpt, slots),
+                         lambda i, j, g, k: (g, j * nkt + k, 0)),
+            pl.BlockSpec((1, bpt, cap, s),
+                         lambda i, j, g, k: (g, j * nkt + k, 0, 0)),
+            pl.BlockSpec(lut.shape, lambda i, j, g, k: (0, 0)),  # resident
+            pl.BlockSpec((tile_n, 1), lambda i, j, g, k: (j, 0)),
+            pl.BlockSpec((tile_n, 1), lambda i, j, g, k: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((bm, tile_n), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((bm, tile_n), lambda i, j, g, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, tile_n), jnp.float32),
                         pltpu.VMEM((bm, 1), jnp.float32)],

@@ -11,7 +11,9 @@ about block alignment.
 """
 from __future__ import annotations
 
+import collections
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -26,9 +28,31 @@ from . import fused_decode_matmul as _fdm
 # decode_dequant_matmul only (force the legacy two-step decode→matmul path).
 Impl = str
 
+# What 'auto' resolves to before the backend check.  CI's interpret-mode
+# kernel job sets REPRO_TEST_IMPL=pallas_interpret (via tests/conftest.py)
+# so every auto-dispatched call exercises the Pallas kernel bodies on the
+# CPU runner instead of the jnp oracles.
+_DEFAULT_IMPL = os.environ.get("REPRO_TEST_IMPL", "auto")
+
+
+def set_default_impl(impl: Impl) -> None:
+    """Override what ``impl='auto'`` resolves to (tests/CI)."""
+    global _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+
+
+# Trace-time dispatch probe: which decode→dequant→matmul path each call
+# took.  Bodies run once per jit trace, so tests can clear this, run a
+# sharded matmul, and assert e.g. 'fused_shard_map' was taken (the CI
+# acceptance check that sharded paths never silently fall back to the
+# dense-materializing two-step path).
+DISPATCH_COUNTS = collections.Counter()
+
 
 def _use_pallas(impl: Impl) -> tuple[bool, bool]:
     """-> (use_kernel, interpret)"""
+    if impl == "auto":
+        impl = _DEFAULT_IMPL
     if impl == "ref":
         return False, False
     if impl == "pallas":
@@ -118,13 +142,20 @@ def flash_attention(q, k, v, *, causal=True, sm_scale=None, q_offset=0,
                                q_offset=q_offset, interpret=interpret, **kw)
 
 
-def _mesh_device_count() -> int:
-    from repro.sharding.partition import _current_axis_sizes
-    axis_sizes, _ = _current_axis_sizes()
-    n = 1
+def _mesh_state():
+    """(axis_sizes, mesh, total_devices) of the trace-time mesh — the
+    shared preamble of both fused-dispatch decisions below."""
+    from repro.sharding.partition import current_mesh
+    axis_sizes, mesh = current_mesh()
+    ndev = 1
     for v in axis_sizes.values():
-        n *= v
-    return n
+        ndev *= v
+    return axis_sizes, mesh, ndev
+
+
+def _is_concrete_mesh(mesh) -> bool:
+    from jax.sharding import Mesh
+    return isinstance(mesh, Mesh)
 
 
 def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
@@ -133,49 +164,148 @@ def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
 
     ``packed`` is a repro.core.compressed.PackedLinear (single layer).
 
-    Dispatch: when the planes carry the tile-major layout
-    (``packed.tile_n > 0``) this routes to the fused decode→dequant→matmul
-    megakernel (``fused_decode_matmul`` on TPU, its strip-scan oracle
-    ``ref.fused_decode_matmul`` elsewhere) — the dense weight never
-    materializes.  ``impl='unfused'`` forces the legacy two-step path
-    (decode to HBM, then ``dequant_matmul``), which also serves as the
-    fallback for linear-layout planes and for sharded meshes (the fused
-    kernel is the single-device on-device-serving path; its planes would
-    need a shard_map wrapper to split the grid across a mesh — see
-    ROADMAP open items).
+    Dispatch (tile-major planes, ``packed.tile_n > 0``): fused is the
+    invariant — the dense weight never materializes in HBM.
+      * no mesh / 1 device  → fused megakernel directly
+        (``fused_decode_matmul`` on TPU, its strip-scan oracle
+        ``ref.fused_decode_matmul`` elsewhere).
+      * active concrete mesh → shard_map wrapper: the tile-major block
+        axis splits over the weight-sharding axes (pod, model) in whole
+        out-tile bands — requires ``(N / tile_n) % (pod·model) == 0``,
+        which ``blocked_codec.choose_fused_tiles(shards=...)`` arranges —
+        and each device runs the fused grid over its resident compressed
+        slab; x replicates over (pod, model) (rows stay data-sharded when
+        divisible) and the output comes back column-sharded on
+        (pod, model).  Plane gathers (FSDP'd storage) move compressed
+        bytes, never the dense weight — same D1 degather economics as the
+        two-step path.
+    Fallbacks to the legacy two-step path (decode to HBM, then
+    ``dequant_matmul``): linear-layout planes (tile_n == 0), stacked
+    planes outside a scan, out-tile counts that don't divide the weight
+    axes, abstract meshes, and ``impl='unfused'`` (the benchmark
+    baseline).
     """
     unfused = impl == "unfused"
     inner_impl = "auto" if unfused else impl
     tile_n = getattr(packed, "tile_n", 0)
-    if (not unfused and tile_n and packed.codes.ndim == 2
-            and _mesh_device_count() == 1):
-        return _fused_decode_matmul(x, packed, lut, out_dtype=out_dtype,
-                                    impl=impl)
+    if not unfused and tile_n and packed.codes.ndim == 2:
+        axis_sizes, mesh, ndev = _mesh_state()
+        if ndev <= 1:
+            DISPATCH_COUNTS["fused"] += 1
+            return _fused_decode_matmul(x, packed, lut, out_dtype=out_dtype,
+                                        impl=impl)
+        waxes = tuple(a for a in ("pod", "model")
+                      if axis_sizes.get(a, 1) > 1)
+        wsize = 1
+        for a in waxes:
+            wsize *= axis_sizes[a]
+        if (_is_concrete_mesh(mesh)
+                and (packed.shape[0] // tile_n) % wsize == 0):
+            DISPATCH_COUNTS["fused_shard_map"] += 1
+            return _fused_decode_matmul_sharded(
+                x, packed, lut, out_dtype=out_dtype, impl=impl,
+                mesh=mesh, axis_sizes=axis_sizes, waxes=waxes)
+    DISPATCH_COUNTS["unfused"] += 1
     return _decode_dequant_matmul_unfused(x, packed, lut,
                                           out_dtype=out_dtype,
                                           impl=inner_impl)
 
 
+def _fused_tile_matmul(x2, codes, literals, nlit, lut, scale, zero, *,
+                       shape, tile_n, tile_k, out_dtype, impl: Impl):
+    """Fused matmul over tile-major planes, shard-local workhorse.
+
+    ``codes`` may carry a leading column-group axis (G, nb, slots) — the
+    shard-local stack of a TiledPackedLinear — in which case group g
+    covers x columns [g·K/G, (g+1)·K/G) of ``shape = (N, K)``.  Runs the
+    Pallas megakernel (grouped grid) or the strip-scan oracle, summing
+    per-group partial affines in f32 (exact: the affine epilogue is
+    linear in the accumulators).
+    """
+    use_kernel, interpret = _use_pallas(impl)
+    n, ktot = shape
+    m = x2.shape[0]
+    if use_kernel:
+        bm = min(_fdm.DEFAULT_BM, max(m, 1))
+        x2p, m0 = _pad_to(x2, 0, bm)
+        y = _fdm.fused_decode_matmul(
+            x2p, codes, literals, lut, scale, zero, shape=tuple(shape),
+            tile_n=tile_n, tile_k=tile_k, bm=bm, out_dtype=out_dtype,
+            interpret=interpret)
+        return y[:m0]
+    if codes.ndim == 2:
+        return ref.fused_decode_matmul(
+            x2, codes, literals, nlit, lut, scale, zero,
+            shape=tuple(shape), tile_n=tile_n, tile_k=tile_k,
+            out_dtype=out_dtype)
+    groups = codes.shape[0]
+    kg = ktot // groups
+    acc = jnp.zeros((m, n), jnp.float32)
+    for g in range(groups):   # small static count: unrolled like K-strips
+        acc = acc + ref.fused_decode_matmul(
+            x2[:, g * kg:(g + 1) * kg], codes[g], literals[g], nlit[g],
+            lut, scale, zero, shape=(n, kg), tile_n=tile_n, tile_k=tile_k,
+            out_dtype=jnp.float32)
+    return acc.astype(out_dtype)
+
+
 def _fused_decode_matmul(x, packed, lut, *, out_dtype, impl: Impl):
     """Megakernel path — decoded weight tiles live only in VMEM/registers."""
-    use_kernel, interpret = _use_pallas(impl)
     n, kdim = packed.shape
     lead = x.shape[:-1]
     x2 = x.reshape(-1, kdim)
-    if not use_kernel:
-        y = ref.fused_decode_matmul(
-            x2, packed.codes, packed.literals, packed.nlit, lut,
-            packed.scale, packed.zero, shape=tuple(packed.shape),
-            tile_n=packed.tile_n, tile_k=packed.tile_k, out_dtype=out_dtype)
-        return y.reshape(*lead, n)
-    bm = min(_fdm.DEFAULT_BM, max(x2.shape[0], 1))
-    x2, m0 = _pad_to(x2, 0, bm)
-    y = _fdm.fused_decode_matmul(
-        x2, packed.codes, packed.literals, lut, packed.scale, packed.zero,
-        shape=tuple(packed.shape), tile_n=packed.tile_n,
-        tile_k=packed.tile_k, bm=bm, out_dtype=out_dtype,
-        interpret=interpret)
-    return y[:m0].reshape(*lead, n)
+    y = _fused_tile_matmul(x2, packed.codes, packed.literals, packed.nlit,
+                           lut, packed.scale, packed.zero,
+                           shape=tuple(packed.shape), tile_n=packed.tile_n,
+                           tile_k=packed.tile_k, out_dtype=out_dtype,
+                           impl=impl)
+    return y.reshape(*lead, n)
+
+
+def _fused_decode_matmul_sharded(x, packed, lut, *, out_dtype, impl: Impl,
+                                 mesh, axis_sizes, waxes):
+    """shard_map-wrapped fused megakernel for a mesh-sharded PackedLinear.
+
+    The tile-major block axis (and scale/zero rows) split over ``waxes``
+    (the pod/model weight axes) in whole out-tile bands; each device runs
+    the fused grid over its shard-local (N/wsize, K) compressed slab.  The
+    output is column-parallel — y's feature dim lands sharded on
+    ``waxes``, no psum needed — and x's rows stay on the data axis when
+    they divide.  For a row_parallel container the math is identical
+    (same dense y); only the output layout differs, and the caller's next
+    constraint reshards activation bytes, never weight bytes.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n, kdim = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    wsize = 1
+    for a in waxes:
+        wsize *= axis_sizes[a]
+    n_loc = n // wsize
+    wspec = waxes if len(waxes) > 1 else (waxes[0] if waxes else None)
+    dsize = axis_sizes.get("data", 1)
+    drow = "data" if (dsize > 1 and m % dsize == 0) else None
+    tile_n, tile_k = packed.tile_n, packed.tile_k
+
+    def local_fn(xl, codes, lits, nlit, lutl, scale, zero):
+        return _fused_tile_matmul(xl, codes, lits, nlit, lutl, scale, zero,
+                                  shape=(n_loc, kdim), tile_n=tile_n,
+                                  tile_k=tile_k, out_dtype=out_dtype,
+                                  impl=impl)
+
+    y = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(drow, None), P(wspec, None), P(wspec, None, None),
+                  P(wspec), P(None, None), P(wspec, None), P(wspec, None)),
+        out_specs=P(drow, wspec),
+        check_rep=False,
+    )(x2, packed.codes, packed.literals, packed.nlit, lut,
+      packed.scale, packed.zero)
+    return y.reshape(*lead, n)
 
 
 def _decode_dequant_matmul_unfused(x, packed, lut, *, out_dtype,
@@ -210,18 +340,107 @@ def _decode_dequant_matmul_unfused(x, packed, lut, *, out_dtype,
 
 def tiled_decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
                                 impl: Impl = "auto"):
-    """2D-TP path (§Perf D2): every device decodes its permanently-resident
+    """2D-TP path (§Perf D2): every device owns a permanently-resident
     (out/model × in/data) compressed tile; x reshards its feature dim onto
     data (MB-scale all-to-all) and the dot's partial sums reduce over data.
     No weight collectives at all.
 
     ``packed`` is a repro.core.compressed.TiledPackedLinear.
+
+    Dispatch: when the per-tile planes carry the fused tile-major layout
+    (``packed.tile_n > 0``) the fused megakernel is the invariant here
+    too — no per-device dense tile is ever materialized:
+      * no mesh / 1 device → one grouped-grid fused call over the whole
+        column-tile stack.
+      * active concrete mesh → shard_map: tile axis splits on data, the
+        per-tile block axis on model (whole out-tile bands — requires
+        ``tiles % data == 0`` and ``(out / tile_n) % model == 0``, which
+        ``encode_tiled_planes(tile='auto', shards=(model, 1))``
+        arranges); each device runs the fused grid over its resident
+        (out/model × in/data) compressed slab and the row-parallel psum
+        over data runs in the epilogue.  Weights cross no links; only
+        activations move.
+    Fallback (linear per-tile layout, stacked planes outside a scan,
+    non-divisible tile counts, abstract meshes, ``impl='unfused'``):
+    decode + dequantize the dense weight per device, then einsum — the
+    legacy two-step 2D-TP path below.
     """
     from repro.sharding.partition import constrain
+    unfused = impl == "unfused"
+    inner_impl = "auto" if unfused else impl
+    tile_n = getattr(packed, "tile_n", 0)
     n, kdim = packed.shape
+    if not unfused and tile_n and packed.codes.ndim == 3:
+        axis_sizes, mesh, ndev = _mesh_state()
+        if ndev <= 1:
+            DISPATCH_COUNTS["tiled_fused"] += 1
+            lead = x.shape[:-1]
+            x2 = x.reshape(-1, kdim)
+            y = _fused_tile_matmul(
+                x2, packed.codes, packed.literals, packed.nlit, lut,
+                packed.scale, packed.zero, shape=(n, kdim),
+                tile_n=tile_n, tile_k=packed.tile_k,
+                out_dtype=out_dtype, impl=impl)
+            return y.reshape(*lead, n)
+        dsize = axis_sizes.get("data", 1)
+        msize = axis_sizes.get("model", 1)
+        if (_is_concrete_mesh(mesh) and packed.tiles % dsize == 0
+                and (n // tile_n) % msize == 0):
+            DISPATCH_COUNTS["tiled_fused_shard_map"] += 1
+            return _tiled_fused_sharded(x, packed, lut, out_dtype=out_dtype,
+                                        impl=impl, mesh=mesh,
+                                        axis_sizes=axis_sizes)
+    DISPATCH_COUNTS["tiled_unfused"] += 1
     w = packed.materialize(lut, dtype=x.dtype)        # (n, kdim), in-sharded
     w = constrain(w, "model", ("pod", "data"))
     xs = constrain(x, *([None] * (x.ndim - 1)), ("pod", "data"))
     y = jnp.einsum("...k,nk->...n", xs, w)
     return constrain(y.astype(out_dtype),
                      *([None] * (x.ndim - 1)), "model")
+
+
+def _tiled_fused_sharded(x, packed, lut, *, out_dtype, impl: Impl,
+                         mesh, axis_sizes):
+    """shard_map-wrapped fused megakernel for the TiledPackedLinear 2D-TP
+    layout: tile (column-group) axis on data, block axis on model, pods
+    replicate weights and carry x rows.  Each device decodes nothing to
+    HBM — its grouped fused grid streams the resident compressed tiles —
+    and the contraction's partial sums psum over data (the row-parallel
+    epilogue), leaving y column-sharded on model.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n, kdim = packed.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    daxis = "data" if "data" in axis_sizes else None
+    maxis = "model" if "model" in axis_sizes else None
+    msize = axis_sizes.get("model", 1)
+    psize = axis_sizes.get("pod", 1)
+    prow = "pod" if ("pod" in axis_sizes and psize > 1
+                     and m % psize == 0) else None
+    n_loc = n // msize
+    in_loc = kdim // axis_sizes.get("data", 1)
+    tile_n, tile_k = packed.tile_n, packed.tile_k
+
+    def local_fn(xl, codes, lits, nlit, lutl, scale, zero):
+        y = _fused_tile_matmul(xl, codes, lits, nlit, lutl, scale, zero,
+                               shape=(n_loc, in_loc), tile_n=tile_n,
+                               tile_k=tile_k, out_dtype=jnp.float32,
+                               impl=impl)
+        if daxis is not None:
+            y = jax.lax.psum(y, daxis)    # row-parallel epilogue reduce
+        return y.astype(out_dtype)
+
+    y = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(prow, daxis), P(daxis, maxis, None),
+                  P(daxis, maxis, None, None), P(daxis, maxis),
+                  P(None, None), P(maxis, None), P(maxis, None)),
+        out_specs=P(prow, maxis),
+        check_rep=False,
+    )(x2, packed.codes, packed.literals, packed.nlit, lut,
+      packed.scale, packed.zero)
+    return y.reshape(*lead, n)

@@ -5,6 +5,15 @@
 
 Host-mesh driver over the same (prefill, decode) step functions the
 multi-pod dry-run lowers for the production meshes.
+
+Sharded serving (``--mesh DATA,MODEL``, e.g. with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 2,4``):
+params are placed with the partition rules, the step functions are traced
+under the mesh, and every compressed matmul dispatches through the
+shard-mapped fused decode→dequant→matmul path — a single traced program
+per phase, no dense per-device weight materialization (the dispatch
+summary printed at the end proves which paths ran).  ``--tiles N`` stores
+eligible weights as 2D-TP column tiles (TiledPackedLinear).
 """
 from __future__ import annotations
 
@@ -17,9 +26,25 @@ import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import CompressionPolicy
+from repro.kernels import ops
 from repro.models import lm as LM
 from repro.serve.engine import build_serve_params, make_serve_fns
+from repro.sharding import partition as PT
 from repro.train.data import DataConfig, DataPipeline
+
+
+def _parse_mesh(spec: str | None):
+    """'2,4' -> Mesh((2, 4), ('data', 'model')); None -> no mesh."""
+    if not spec:
+        return None
+    shape = tuple(int(s) for s in spec.split(","))
+    assert len(shape) == 2, f"--mesh wants DATA,MODEL, got {spec!r}"
+    ndev = jax.device_count()
+    need = shape[0] * shape[1]
+    assert need <= ndev, (f"--mesh {spec} needs {need} devices, have {ndev} "
+                          f"(set XLA_FLAGS=--xla_force_host_platform_"
+                          f"device_count={need} for CPU)")
+    return jax.make_mesh(shape, ("data", "model"))
 
 
 def main():
@@ -30,7 +55,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--mesh", default=None,
+                    help="DATA,MODEL mesh shape for sharded serving")
+    ap.add_argument("--tiles", type=int, default=0,
+                    help="2D-TP column tiles for compressed weights "
+                         "(TiledPackedLinear; 0 = plain PackedLinear)")
     args = ap.parse_args()
+
+    mesh = _parse_mesh(args.mesh)
+    model_shards = mesh.shape["model"] if mesh is not None else 1
 
     cfg = get_config(args.arch).smoke
     params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
@@ -40,15 +73,27 @@ def main():
     if args.mode == "dense":
         sp, lut = params, None
     else:
-        st = build_serve_params(params, CompressionPolicy(
-            mode=args.mode, min_weight_size=1024))
+        st = build_serve_params(
+            params, CompressionPolicy(mode=args.mode, min_weight_size=1024,
+                                      tiles=args.tiles),
+            model_shards=model_shards)
         sp, lut = st.params, st.lut
         print(f"{args.mode} weights: {sum(st.stats.values())/2**20:.2f} MiB")
+
+    if mesh is not None:
+        # place params per the partition rules; lut replicates
+        specs = PT.make_param_specs(sp, mesh, PT.ShardingConfig(mode="serve"))
+        sp = jax.device_put(sp, PT.to_named(specs, mesh))
+        if lut is not None:
+            lut = jax.device_put(
+                lut, jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        print(f"mesh: {dict(mesh.shape)}")
 
     toks = data.batch_at(0)["tokens"]
     b, t0 = toks.shape
     caches = LM.init_caches(cfg, b, t0 + args.max_new, dtype=jnp.float32)
-    prefill, decode = make_serve_fns(cfg)   # jitted + cached per config
+    prefill, decode = make_serve_fns(cfg, mesh=mesh)  # jitted, cached per
+    ops.DISPATCH_COUNTS.clear()                       # (config, mesh)
 
     t = time.perf_counter()
     logits, caches = prefill(sp, lut, {"tokens": toks}, caches)
@@ -66,6 +111,8 @@ def main():
     dt = time.perf_counter() - t
     print(f"decode: {args.max_new-1} steps in {1e3*dt:.1f} ms "
           f"({b*(args.max_new-1)/dt:.1f} tok/s)")
+    if args.mode == "compressed":
+        print("matmul dispatch:", dict(ops.DISPATCH_COUNTS))
     print("sample:", np.concatenate([np.asarray(o) for o in outs], 1)[0].tolist())
 
 

@@ -4,10 +4,13 @@ Every linear weight is stored ``(out, in)`` and may be a dense array, a
 ``QuantLinear`` (int8) or a ``PackedLinear`` (Tiny-QMoE compressed); the
 ``linear`` dispatcher below routes to the fused kernels, which is how the
 paper's technique becomes a first-class property of *every* architecture in
-the zoo rather than a bolt-on.  Tile-laid ``PackedLinear`` weights
-(``tile_n > 0``) hit the decode→dequant→matmul megakernel through
-``ops.decode_dequant_matmul`` — the dense weight never materializes; pass
-``impl='unfused'`` to force the legacy two-step path.
+the zoo rather than a bolt-on.  Tile-laid ``PackedLinear`` /
+``TiledPackedLinear`` weights (``tile_n > 0``) hit the
+decode→dequant→matmul megakernel through ``ops.decode_dequant_matmul`` /
+``ops.tiled_decode_dequant_matmul`` on single devices AND under sharded
+meshes (a shard_map wrapper splits the fused grid per device; see the
+mesh-dispatch rules on those ops) — the dense weight never materializes;
+pass ``impl='unfused'`` to force the legacy two-step path.
 
 Param trees are plain nested dicts so that (a) ``lax.scan`` over stacked
 layers works out of the box, (b) sharding rules match on path names, and
@@ -161,8 +164,8 @@ _BATCH = ("pod", "data")
 
 
 def _model_axis_size() -> int:
-    from repro.sharding.partition import _current_axis_sizes
-    axis_sizes, _ = _current_axis_sizes()
+    from repro.sharding.partition import current_mesh
+    axis_sizes, _ = current_mesh()
     return axis_sizes.get("model", 1)
 
 
@@ -598,9 +601,9 @@ def apply_moe_local(p: Params, x: jax.Array, cfg, *, lut=None,
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro.sharding.partition import _current_axis_sizes
+    from repro.sharding.partition import current_mesh
 
-    axis_sizes, mesh = _current_axis_sizes()
+    axis_sizes, mesh = current_mesh()
     msize = axis_sizes.get("model", 1)
     e_full = cfg.n_experts
     b, t, d = x.shape
@@ -652,8 +655,8 @@ def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto"):
     capacity-drop semantics).
     """
     if getattr(cfg, "moe_local_dispatch", False):
-        from repro.sharding.partition import _current_axis_sizes
-        axis_sizes, mesh = _current_axis_sizes()
+        from repro.sharding.partition import current_mesh
+        axis_sizes, mesh = current_mesh()
         msize = axis_sizes.get("model", 1)
         bsize = 1
         for a in ("pod", "data"):

@@ -20,6 +20,7 @@ Weight modes mirror the paper's evaluation triple:
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 from functools import partial
@@ -32,7 +33,9 @@ import numpy as np
 from repro.core import (CompressionPolicy, QuantConfig, build_lut,
                         encode_blocked, find_frequent_sequences,
                         quantize_linear)
-from repro.core.compressed import PackedLinear, QuantLinear
+from repro.core.compressed import (PackedLinear, QuantLinear,
+                                   TiledPackedLinear, encode_tiled_planes,
+                                   pad_literals)
 from repro.core import blocked_codec as bcdc
 from repro.core.blocked_codec import DEFAULT_BLOCK_WEIGHTS
 from repro.models import lm as LM
@@ -58,12 +61,20 @@ def _iter_weight_paths(params):
 def build_serve_params(params: Any, policy: CompressionPolicy,
                        *, qcfg: QuantConfig | None = None,
                        table: dict | None = None,
-                       block_weights: int | None = None) -> ServeState:
+                       block_weights: int | None = None,
+                       model_shards: int = 1) -> ServeState:
     """Host-side conversion dense → quant/compressed per policy.
 
     Stacked (scanned) leaves keep their leading layer/expert dims: each
     sub-tensor is quantized per-channel and encoded separately, then the
     planes are re-stacked (uniform lit_cap across the stack).
+
+    ``model_shards``: intended model-axis size of the serving mesh — the
+    fused tile choice then divides the per-shard out dim so sharded
+    serving dispatches to the shard-mapped fused megakernel instead of
+    falling back to the two-step path (see ``ops.decode_dequant_matmul``).
+    ``policy.tiles > 1`` stores eligible weights as TiledPackedLinear
+    column tiles (2D-TP resident storage, §Perf D2), also tile-major.
     """
     qcfg = qcfg or QuantConfig(bits=policy.bits, granularity="per_channel")
     bw = block_weights or policy.block_weights
@@ -117,11 +128,48 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
                 lead + (leaf.shape[-2], 1))
             new_leaves.append(QuantLinear(vals, sc, zr))
             n_bytes["quant"] += int(vals.nbytes + sc.nbytes + zr.nbytes)
+        elif (policy.tiles > 1 and leaf.shape[-1] % policy.tiles == 0):
+            # 2D-TP column-tile storage, fused tile-major per tile.
+            per = [encode_tiled_planes(
+                np.asarray(q.values, dtype=np.uint8), table,
+                np.asarray(lut), policy.tiles, block_weights=bw,
+                tile="auto", shards=(model_shards, 1)) for q in qls]
+            tn, tk = per[0][1], per[0][2]
+            cap = max(bc.literals.shape[1]
+                      for bcs, _, _ in per for bc in bcs)
+
+            def stackplane(f):
+                return jnp.stack([jnp.stack([f(bc) for bc in bcs])
+                                  for bcs, _, _ in per])
+
+            codes = stackplane(lambda bc: bc.codes)
+            lits = stackplane(lambda bc: pad_literals(bc.literals, cap))
+            nlit = stackplane(lambda bc: bc.nlit)
+            sc = jnp.stack([q.scale for q in qls])
+            zr = jnp.stack([q.zero for q in qls])
+            if lead:
+                codes = codes.reshape(lead + codes.shape[1:])
+                lits = lits.reshape(lead + lits.shape[1:])
+                nlit = nlit.reshape(lead + nlit.shape[1:])
+                sc = sc.reshape(lead + sc.shape[1:])
+                zr = zr.reshape(lead + zr.shape[1:])
+            else:
+                codes, lits, nlit = codes[0], lits[0], nlit[0]
+                sc, zr = sc[0], zr[0]
+            tl = TiledPackedLinear(codes, lits, nlit, sc, zr,
+                                   shape=tuple(leaf.shape[-2:]),
+                                   tile_n=tn, tile_k=tk)
+            new_leaves.append(tl)
+            n_bytes["compressed"] += tl.payload_nbytes + int(
+                sc.nbytes + zr.nbytes)
         else:
             # Tile-major layout when the shape admits it, so serving hits
             # the fused decode→dequant→matmul megakernel; linear layout
-            # (tile 0×0) otherwise → two-step fallback path.
-            tiles = bcdc.choose_fused_tiles(leaf.shape[-2:], bw)
+            # (tile 0×0) otherwise → two-step fallback path.  The tile
+            # choice divides the per-``model_shards`` out dim so the
+            # shard-mapped fused path stays reachable on the target mesh.
+            tiles = bcdc.choose_fused_tiles(leaf.shape[-2:], bw,
+                                            shards=(model_shards, 1))
             tn, tk = tiles[:2] if tiles else (0, 0)
             # encode each sub-tensor with a uniform literal capacity
             if tiles:
@@ -134,15 +182,8 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
                                       table, lut=np.asarray(lut),
                                       block_weights=bw) for q in qls]
             cap = max(bc.literals.shape[1] for bc in bcs)
-            def padlit(bc):
-                cur = bc.literals.shape[1]
-                if cur == cap:
-                    return bc.literals
-                pad = jnp.zeros((bc.literals.shape[0], cap - cur,
-                                 bc.literals.shape[2]), jnp.uint8)
-                return jnp.concatenate([bc.literals, pad], axis=1)
             codes = jnp.stack([bc.codes for bc in bcs])
-            lits = jnp.stack([padlit(bc) for bc in bcs])
+            lits = jnp.stack([pad_literals(bc.literals, cap) for bc in bcs])
             nlit = jnp.stack([bc.nlit for bc in bcs])
             sc = jnp.stack([q.scale for q in qls])
             zr = jnp.stack([q.zero for q in qls])
@@ -184,7 +225,7 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
 TRACE_COUNTS = collections.Counter()
 
 
-def make_serve_fns(cfg, *, jit: bool = True):
+def make_serve_fns(cfg, *, jit: bool = True, mesh=None):
     """Returns (prefill, decode_step) for serving.
 
     prefill(params, lut, tokens_or_embeds, caches) -> (last_logits, caches)
@@ -196,16 +237,36 @@ def make_serve_fns(cfg, *, jit: bool = True):
     re-trace per call.  ``jit=False`` returns the raw closures for callers
     that apply their own pjit shardings (launch/dryrun) or embed the step
     in a larger traced computation (the ``generate`` scan loop).
+
+    ``mesh``: a concrete Mesh made visible (``partition.active_mesh``) at
+    trace time, so in-graph constraints and the shard-mapped fused
+    decode→dequant→matmul paths see it; the jit cache keys on (cfg, mesh),
+    so mesh-less and sharded closures never share a stale trace.
     """
     if jit:
-        return _jitted_serve_fns(cfg)
+        return _jitted_serve_fns(cfg, mesh)
     return _raw_serve_fns(cfg)
 
 
+def _mesh_ctx(mesh):
+    from repro.sharding.partition import active_mesh
+    return active_mesh(mesh) if mesh is not None else contextlib.nullcontext()
+
+
 @functools.lru_cache(maxsize=None)
-def _jitted_serve_fns(cfg):
+def _jitted_serve_fns(cfg, mesh=None):
     prefill, decode_step = _raw_serve_fns(cfg)
-    return jax.jit(prefill), jax.jit(decode_step)
+
+    def wrap(fn):
+        @jax.jit
+        def wrapped(*args):
+            with _mesh_ctx(mesh):   # trace-time: constraints see the mesh
+                return fn(*args)
+        return wrapped
+
+    if mesh is None:
+        return jax.jit(prefill), jax.jit(decode_step)
+    return wrap(prefill), wrap(decode_step)
 
 
 def _raw_serve_fns(cfg):
@@ -252,12 +313,15 @@ def _raw_serve_fns(cfg):
     return prefill, decode_step
 
 
-@partial(jax.jit, static_argnums=(0, 1, 2))
-def _decode_loop(cfg, steps: int, temperature: float,
+@partial(jax.jit, static_argnums=(0, 1, 2, 3))
+def _decode_loop(cfg, steps: int, temperature: float, mesh,
                  params, lut, tok0, caches, pos0, key):
     """``steps`` decode steps under one ``lax.scan`` — a single trace and a
     single device program for the whole decode phase, instead of one
-    host-synced dispatch (and, un-jitted, one retrace) per token."""
+    host-synced dispatch (and, un-jitted, one retrace) per token.  ``mesh``
+    (static, hashable) scopes the trace under ``active_mesh`` so sharded
+    decode runs the same single program through the shard-mapped fused
+    kernel paths."""
     TRACE_COUNTS["decode_loop"] += 1
     _, decode_step = _raw_serve_fns(cfg)
     sample = temperature > 0 and key is not None
@@ -274,19 +338,22 @@ def _decode_loop(cfg, steps: int, temperature: float,
         return (nxt, caches, pos + 1, key), nxt
 
     init = (tok0, caches, jnp.asarray(pos0, jnp.int32), key)
-    _, toks = jax.lax.scan(step, init, None, length=steps)
+    with _mesh_ctx(mesh):
+        _, toks = jax.lax.scan(step, init, None, length=steps)
     return jnp.swapaxes(toks[..., 0], 0, 1)        # (steps, B, 1) -> (B, steps)
 
 
 def generate(params, cfg, tokens, *, lut=None, max_new: int = 16,
              max_len: int | None = None, temperature: float = 0.0,
-             key=None, embeds=None):
+             key=None, embeds=None, mesh=None):
     """Greedy/sampled generation (examples + accuracy benchmarks).
 
     Prefill runs once under jit; the decode phase is a single jitted
     ``lax.scan`` over ``decode_step`` (see ``_decode_loop``), so compressed
     layers hit the fused decode→dequant→matmul kernel back-to-back with no
-    per-token host sync or retrace.
+    per-token host sync or retrace.  Pass ``mesh`` to serve sharded: the
+    same single-trace loop then dispatches through the shard-mapped fused
+    paths (see ``ops.decode_dequant_matmul``).
     """
     if max_new <= 0:
         return tokens
@@ -294,12 +361,12 @@ def generate(params, cfg, tokens, *, lut=None, max_new: int = 16,
     extra = embeds.shape[1] if embeds is not None else 0
     max_len = max_len or (t0 + extra + max_new)
     caches = LM.init_caches(cfg, b, max_len)
-    prefill, _ = make_serve_fns(cfg)
+    prefill, _ = make_serve_fns(cfg, mesh=mesh)
     logits, caches = prefill(params, lut,
                              {"tokens": tokens, "embeds": embeds}, caches)
     tok0 = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
     if max_new <= 1:
         return jnp.concatenate([tokens, tok0], axis=1)
-    toks = _decode_loop(cfg, max_new - 1, float(temperature),
+    toks = _decode_loop(cfg, max_new - 1, float(temperature), mesh,
                         params, lut, tok0, caches, t0 + extra, key)
     return jnp.concatenate([tokens, tok0, toks.astype(tokens.dtype)], axis=1)

@@ -403,6 +403,18 @@ def _current_axis_sizes():
         return {}, None
 
 
+def current_mesh():
+    """Public (axis_sizes, mesh) view of the mesh visible at trace time.
+
+    ``mesh`` is the concrete Mesh from :func:`active_mesh` when one is
+    installed (required by shard_map-dispatching ops — e.g. the fused
+    decode→dequant→matmul paths in ``repro.kernels.ops`` and the
+    local-routing MoE), else JAX's abstract mesh, else None; axis_sizes is
+    {} when no mesh is visible.
+    """
+    return _current_axis_sizes()
+
+
 def constrain(x, *dims):
     """Best-effort ``with_sharding_constraint`` inside jit.
 

@@ -1,5 +1,16 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the single CPU
-device; only launch/dryrun.py forces 512 placeholder devices."""
+device by default (CI's tier1-multidevice job exports
+XLA_FLAGS=--xla_force_host_platform_device_count=8 itself); only
+launch/dryrun.py forces 512 placeholder devices.
+
+REPRO_TEST_IMPL=pallas_interpret re-points every ``impl='auto'`` kernel
+dispatch at the Pallas kernel bodies in interpret mode (CI's
+kernel-interpret job runs tests/test_kernels.py + tests/test_fused_kernel.py
+this way, so the kernels — not just the jnp oracles — are validated on
+every PR).
+"""
+import os
+
 import numpy as np
 import pytest
 
@@ -18,3 +29,7 @@ def key():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
+    impl = os.environ.get("REPRO_TEST_IMPL")
+    if impl:
+        from repro.kernels import ops
+        ops.set_default_impl(impl)

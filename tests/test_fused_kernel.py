@@ -152,6 +152,30 @@ def test_fused_batched_leading_dims(rng):
     assert y.shape == (2, 3, 32)
 
 
+def test_fused_kernel_grouped_planes_interpret(rng):
+    """Column-group axis (the shard-local TiledPackedLinear case): stacked
+    per-group tile-major planes through the 4-D grid must agree BITWISE
+    with the G=1 kernel over the same dense weight (integer x ⇒ exact)."""
+    from repro.core.compressed import pack_linear_tiled
+    n, k, m, groups = 64, 256, 16, 4
+    w = jnp.asarray(rng.laplace(0.0, 0.02, size=(n, k)).astype(np.float32))
+    ql = quantize_linear(w)
+    table = codec.find_frequent_sequences([np.asarray(ql.values)])
+    lut = build_lut(table)
+    pt = pack_linear(w, table, lut, tile="auto")
+    tiled = pack_linear_tiled(w, table, lut, tiles=groups, tile="auto")
+    assert tiled.codes.ndim == 3 and tiled.tile_n > 0
+    x = jnp.asarray(rng.integers(-8, 9, size=(m, k)).astype(np.float32))
+    y_grouped = fdm_kernel.fused_decode_matmul(
+        x, tiled.codes, tiled.literals, jnp.asarray(lut), tiled.scale,
+        tiled.zero, shape=(n, k), tile_n=tiled.tile_n, tile_k=tiled.tile_k,
+        interpret=True)
+    y_flat = fdm_kernel.fused_decode_matmul(
+        x, pt.codes, pt.literals, jnp.asarray(lut), pt.scale, pt.zero,
+        shape=(n, k), tile_n=pt.tile_n, tile_k=pt.tile_k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_grouped), np.asarray(y_flat))
+
+
 def test_fused_kernel_rejects_nontiled_shapes(rng):
     """Kernel-level API asserts tile alignment (ops handles the padding)."""
     pt, _, lut = _packed_pair(rng, 64, 128)
