@@ -393,6 +393,49 @@ def quantize_linear(w: jax.Array, qcfg: QuantConfig | None = None) -> QuantLinea
                        scale=qt.scale, zero=qt.zero)
 
 
+def pack_expert_stack(ws, table: dict | None = None,
+                      block_weights: int = DEFAULT_BLOCK_WEIGHTS,
+                      tile="auto"):
+    """Quantize + blocked-compress a list of same-shape expert weights into
+    one stacked PackedLinear (leading expert axis on every plane, one
+    shared dictionary, uniform literal cap; tile-major by default) — the
+    host-side mirror of what ``engine.build_serve_params`` emits for
+    ``experts/w_*`` leaves.  Returns ``(packed, lut)`` with ``lut`` as a
+    device array.  ``tile=None`` keeps the linear layout (grouped-kernel
+    ineligible; two-step fallback), for tests of the fallback path.
+    """
+    from .codec import find_frequent_sequences
+
+    n, k = ws[0].shape
+    qls = [quantize_linear(jnp.asarray(w)) for w in ws]
+    if table is None:
+        table = find_frequent_sequences([np.asarray(q.values) for q in qls])
+    lut = bcdc.build_lut(table)
+    if tile == "auto":
+        picked = bcdc.choose_fused_tiles((n, k), block_weights)
+        tile = picked[:2] if picked else None
+    if tile is not None:
+        tn, tk = tile
+        bcs = [bcdc.encode_blocked_tiled(np.asarray(q.values), table,
+                                         lut=lut, tile_n=tn, tile_k=tk,
+                                         block_weights=block_weights)
+               for q in qls]
+    else:
+        tn, tk = 0, 0
+        bcs = [bcdc.encode_blocked(np.asarray(q.values), table, lut=lut,
+                                   block_weights=block_weights)
+               for q in qls]
+    cap = max(bc.literals.shape[1] for bc in bcs)
+    packed = PackedLinear(
+        codes=jnp.stack([bc.codes for bc in bcs]),
+        literals=jnp.stack([pad_literals(bc.literals, cap) for bc in bcs]),
+        nlit=jnp.stack([bc.nlit for bc in bcs]),
+        scale=jnp.stack([q.scale for q in qls]),
+        zero=jnp.stack([q.zero for q in qls]),
+        shape=(n, k), tile_n=tn, tile_k=tk)
+    return packed, jnp.asarray(lut)
+
+
 def pack_linear(w: jax.Array, table: dict, lut: np.ndarray,
                 qcfg: QuantConfig | None = None,
                 block_weights: int = DEFAULT_BLOCK_WEIGHTS,
@@ -440,16 +483,30 @@ def pack_linear(w: jax.Array, table: dict, lut: np.ndarray,
 def planned_packed_specs(shape: tuple, *, stacked: tuple = (),
                          block_weights: int = DEFAULT_BLOCK_WEIGHTS,
                          seq_len: int = DEFAULT_SEQ_LEN,
-                         lit_cap_frac: float = 0.25) -> PackedLinear:
+                         lit_cap_frac: float = 0.25,
+                         tile_n: int = 0,
+                         tile_k: int = 0) -> PackedLinear:
     """ShapeDtypeStruct stand-in for a PackedLinear of a given dense shape.
 
     ``lit_cap_frac`` is the planned escape rate (fraction of slots carrying
     literals); 0.25 is the measured rate on 8-bit quantized transformer
     weights with a 64k dictionary (see benchmarks/compression.py).
+
+    ``tile_n/tile_k`` mirror the fused tile-major layout of
+    :func:`pack_linear` / ``engine.build_serve_params`` (block size shrunk
+    to divide the tile volume, no round-up padding), so dry-run lowering
+    dispatches through the fused megakernel paths exactly like real
+    serving; 0 keeps the legacy linear layout (two-step path).
     """
     n = int(np.prod(shape))
-    nb = -(-n // block_weights)
-    slots = block_weights // seq_len
+    if tile_n:
+        bw = bcdc._shrink_block_weights(tile_n * tile_k, block_weights,
+                                        seq_len)
+        nb = n // bw
+    else:
+        bw = block_weights
+        nb = -(-n // bw)
+    slots = bw // seq_len
     cap = max(1, int(slots * lit_cap_frac))
     sds = jax.ShapeDtypeStruct
     out = shape[0]
@@ -459,7 +516,7 @@ def planned_packed_specs(shape: tuple, *, stacked: tuple = (),
         nlit=sds(stacked + (nb,), jnp.int32),
         scale=sds(stacked + (out, 1), jnp.float32),
         zero=sds(stacked + (out, 1), jnp.float32),
-        shape=tuple(shape), seq_len=seq_len)
+        shape=tuple(shape), seq_len=seq_len, tile_n=tile_n, tile_k=tile_k)
 
 
 def planned_quant_specs(shape: tuple, *, stacked: tuple = ()) -> QuantLinear:

@@ -31,7 +31,16 @@ planes + one VMEM tile.  This relies on the tile-major block layout of
 [t·bpt, (t+1)·bpt), t = j·n_kt + k — so the BlockSpec index maps below can
 address a tile's blocks as one rectangular slab.
 
-Oracle: ``ref.fused_decode_matmul`` (same strip-wise structure in f32).
+``grouped_fused_decode_matmul`` is the MoE variant: the grid grows a
+leading expert (plane) axis so one launch sweeps a whole stacked expert
+weight — the capacity-gathered token blocks (E, cap, K) against the
+stacked tile-major planes (E, nb, slots) — and each grid step decodes one
+(expert, tile_n, tile_k) block in VMEM inside the MXU loop.  Dense expert
+weights, the dominant byte class of every QMoE-style model, never touch
+HBM.
+
+Oracles: ``ref.fused_decode_matmul`` / ``ref.grouped_fused_decode_matmul``
+(same strip-wise structure in f32).
 """
 from __future__ import annotations
 
@@ -47,6 +56,35 @@ from repro.core.codec import ESCAPE
 DEFAULT_BM = 128
 
 
+def _decode_tile(codes_ref, lit_ref, lut_ref, tn, tk):
+    """Decode one (tile_n, tile_k) weight tile from its compressed blocks —
+    the shared core of both kernels (LUT row-gather for dictionary slots,
+    in-block escape-rank gather for literal slots; identical math to
+    ``dict_decode._kernel``).  The uint8 result lives only in VMEM."""
+    codes = codes_ref[...].astype(jnp.int32)              # (1, bpt, slots)
+    codes = codes.reshape(codes.shape[-2:])               # (bpt, slots)
+    lits = lit_ref[...].reshape(lit_ref.shape[-3:])       # (bpt, cap, S)
+    is_esc = codes == ESCAPE
+    safe = jnp.where(is_esc, 0, codes)
+    from_dict = jnp.take(lut_ref[...], safe, axis=0)      # (bpt, slots, S)
+    rank = jnp.clip(jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1,
+                    0, lits.shape[1] - 1)                 # (bpt, slots)
+    from_lit = jnp.take_along_axis(
+        lits, rank[:, :, None].astype(jnp.int32), axis=1)
+    tile = jnp.where(is_esc[:, :, None], from_lit, from_dict)
+    return tile.reshape(tn, tk)                           # uint8, never HBM
+
+
+def _accumulate(x, q, acc_ref, sumx_ref):
+    """MXU matmul against a decoded tile + running x row-sums for the
+    affine epilogue: y = s · (Σ_k x·q − z·Σ_k x)  (q ≤ 255 exact in bf16)."""
+    xb = x.astype(jnp.bfloat16)                           # (bm, tk)
+    acc_ref[...] += jax.lax.dot_general(
+        xb, q.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)               # (bm, tn)
+    sumx_ref[...] += jnp.sum(xb.astype(jnp.float32), axis=1, keepdims=True)
+
+
 def _kernel(x_ref, codes_ref, lit_ref, lut_ref, scale_ref, zero_ref, o_ref,
             acc_ref, sumx_ref):
     g_idx = pl.program_id(2)
@@ -59,27 +97,9 @@ def _kernel(x_ref, codes_ref, lit_ref, lut_ref, scale_ref, zero_ref, o_ref,
         acc_ref[...] = jnp.zeros_like(acc_ref)
         sumx_ref[...] = jnp.zeros_like(sumx_ref)
 
-    # --- decode this (tile_n, tile_k) weight tile from its blocks --------
-    codes = codes_ref[...].astype(jnp.int32)              # (1, bpt, slots)
-    codes = codes.reshape(codes.shape[-2:])               # (bpt, slots)
-    lits = lit_ref[...].reshape(lit_ref.shape[-3:])       # (bpt, cap, S)
-    is_esc = codes == ESCAPE
-    safe = jnp.where(is_esc, 0, codes)
-    from_dict = jnp.take(lut_ref[...], safe, axis=0)      # (bpt, slots, S)
-    rank = jnp.clip(jnp.cumsum(is_esc.astype(jnp.int32), axis=1) - 1,
-                    0, lits.shape[1] - 1)                 # (bpt, slots)
-    from_lit = jnp.take_along_axis(
-        lits, rank[:, :, None].astype(jnp.int32), axis=1)
-    tile = jnp.where(is_esc[:, :, None], from_lit, from_dict)
     tn, tk = scale_ref.shape[0], x_ref.shape[1]
-    q = tile.reshape(tn, tk)                              # uint8, never HBM
-
-    # --- matmul + affine epilogue (dequant_matmul math) ------------------
-    x = x_ref[...].astype(jnp.bfloat16)                   # (bm, tk)
-    acc_ref[...] += jax.lax.dot_general(
-        x, q.astype(jnp.bfloat16), (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)               # (bm, tn)
-    sumx_ref[...] += jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)
+    q = _decode_tile(codes_ref, lit_ref, lut_ref, tn, tk)
+    _accumulate(x_ref[...], q, acc_ref, sumx_ref)
 
     @pl.when((g_idx == ng - 1) & (k_idx == nk - 1))
     def _epilogue():
@@ -149,6 +169,89 @@ def fused_decode_matmul(x: jax.Array, codes: jax.Array, literals: jax.Array,
         ],
         out_specs=pl.BlockSpec((bm, tile_n), lambda i, j, g, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, tile_n), jnp.float32),
+                        pltpu.VMEM((bm, 1), jnp.float32)],
+        interpret=interpret,
+    )(x, codes, literals, lut, scale, zero)
+
+
+def _grouped_kernel(x_ref, codes_ref, lit_ref, lut_ref, scale_ref, zero_ref,
+                    o_ref, acc_ref, sumx_ref):
+    k_idx = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        sumx_ref[...] = jnp.zeros_like(sumx_ref)
+
+    tn, tk = scale_ref.shape[1], x_ref.shape[2]
+    q = _decode_tile(codes_ref, lit_ref, lut_ref, tn, tk)
+    _accumulate(x_ref[...].reshape(x_ref.shape[-2:]), q, acc_ref, sumx_ref)
+
+    @pl.when(k_idx == nk - 1)
+    def _epilogue():
+        s = scale_ref[...].reshape(1, -1)                 # (1, tn)
+        z = zero_ref[...].reshape(1, -1)                  # (1, tn)
+        o_ref[...] = (s * (acc_ref[...] - sumx_ref[...] * z)
+                      ).astype(o_ref.dtype).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "tile_n", "tile_k",
+                                             "bm", "out_dtype", "interpret"))
+def grouped_fused_decode_matmul(x: jax.Array, codes: jax.Array,
+                                literals: jax.Array, lut: jax.Array,
+                                scale: jax.Array, zero: jax.Array, *,
+                                shape: tuple, tile_n: int, tile_k: int,
+                                bm: int = DEFAULT_BM, out_dtype=jnp.float32,
+                                interpret: bool = False) -> jax.Array:
+    """y[e] = x[e] @ dequant(decode(codes[e], literals[e])).T per expert.
+
+    One launch for a whole MoE expert stack: x is the capacity-gathered
+    token block (E, M, K), M % bm == 0 after the caller's padding; codes
+    (E, nb, slots) / literals (E, nb, cap, S) are the stacked tile-major
+    planes of the per-expert dense ``shape = (N, K)`` weights (uniform
+    literal capacity across the stack); scale/zero (E, N, 1) f32.
+
+    The grid is (E, M/bm, N/tile_n, K/tile_k) with the expert (plane) axis
+    outermost: each step streams the compressed blocks of one
+    (expert, tile_n, tile_k) weight tile into VMEM, decodes them
+    in-register, and feeds the uint8 tile straight into the MXU — the same
+    per-tile pipeline as :func:`fused_decode_matmul`, swept across expert
+    planes, so dense expert weights never exist in HBM and peak HBM stays
+    "compressed experts + gathered activations + one VMEM tile".
+    """
+    n, kdim = shape
+    e, m, k2 = x.shape
+    assert k2 == kdim, (x.shape, shape)
+    assert codes.ndim == 3 and codes.shape[0] == e, (codes.shape, x.shape)
+    assert n % tile_n == 0 and kdim % tile_k == 0, (shape, tile_n, tile_k)
+    bm = min(bm, m)
+    assert m % bm == 0, (m, bm)
+    nnt, nkt = n // tile_n, kdim // tile_k
+    _, nb, slots = codes.shape
+    cap, s = literals.shape[2], literals.shape[3]
+    bpt = nb // (nnt * nkt)
+    assert bpt * nnt * nkt == nb and bpt * slots * s == tile_n * tile_k, (
+        codes.shape, literals.shape, shape, tile_n, tile_k)
+
+    grid = (e, m // bm, nnt, nkt)
+    return pl.pallas_call(
+        _grouped_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, tile_k), lambda ei, i, j, k: (ei, i, k)),
+            pl.BlockSpec((1, bpt, slots),
+                         lambda ei, i, j, k: (ei, j * nkt + k, 0)),
+            pl.BlockSpec((1, bpt, cap, s),
+                         lambda ei, i, j, k: (ei, j * nkt + k, 0, 0)),
+            pl.BlockSpec(lut.shape, lambda ei, i, j, k: (0, 0)),  # resident
+            pl.BlockSpec((1, tile_n, 1), lambda ei, i, j, k: (ei, j, 0)),
+            pl.BlockSpec((1, tile_n, 1), lambda ei, i, j, k: (ei, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, tile_n),
+                               lambda ei, i, j, k: (ei, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, tile_n), jnp.float32),
                         pltpu.VMEM((bm, 1), jnp.float32)],
         interpret=interpret,

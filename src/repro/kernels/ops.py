@@ -41,12 +41,33 @@ def set_default_impl(impl: Impl) -> None:
     _DEFAULT_IMPL = impl
 
 
+def _resolve_unfused(impl: Impl) -> Impl:
+    """'auto' resolves to 'unfused' when the session default says so — the
+    benchmark lever that forces the two-step baseline through call sites
+    (``generate``) that don't thread an ``impl`` argument."""
+    if impl == "auto" and _DEFAULT_IMPL == "unfused":
+        return "unfused"
+    return impl
+
+
 # Trace-time dispatch probe: which decode→dequant→matmul path each call
 # took.  Bodies run once per jit trace, so tests can clear this, run a
 # sharded matmul, and assert e.g. 'fused_shard_map' was taken (the CI
 # acceptance check that sharded paths never silently fall back to the
 # dense-materializing two-step path).
 DISPATCH_COUNTS = collections.Counter()
+
+# The shard-mapped fused PackedLinear path replicates x over the weight
+# axes inside its shard_map (in_specs P(drow, None)), so it trades an
+# m·K activation gather for the two-step path's 2·N·K dense-weight HBM
+# round trip.  Decode/small-batch shapes win (m ≲ N); 32k-prefill shapes
+# lose badly (m ≫ N: +19 GiB collectives, +6 GiB HBM per step measured on
+# deepseek-v2-lite prefill_32k×512dev).  Gate: fused shard_map only when
+# m ≤ max(N, this floor); the floor keeps decode-scale row counts (and
+# the 8-device CI shapes) on the fused path for small-N layers.  The
+# grouped expert path is exempt — its xe is expert-sharded, never
+# replicated.
+FUSED_SHARD_MAP_MAX_M = 512
 
 
 def _use_pallas(impl: Impl) -> tuple[bool, bool]:
@@ -182,9 +203,12 @@ def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
     Fallbacks to the legacy two-step path (decode to HBM, then
     ``dequant_matmul``): linear-layout planes (tile_n == 0), stacked
     planes outside a scan, out-tile counts that don't divide the weight
-    axes, abstract meshes, and ``impl='unfused'`` (the benchmark
-    baseline).
+    axes, abstract meshes, prefill-scale row counts under a mesh
+    (m > max(N, ``FUSED_SHARD_MAP_MAX_M``) — the shard_map's x
+    replication would outweigh the dense round-trip; see the constant),
+    and ``impl='unfused'`` (the benchmark baseline).
     """
+    impl = _resolve_unfused(impl)
     unfused = impl == "unfused"
     inner_impl = "auto" if unfused else impl
     tile_n = getattr(packed, "tile_n", 0)
@@ -199,8 +223,10 @@ def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
         wsize = 1
         for a in waxes:
             wsize *= axis_sizes[a]
+        m_rows = x.size // x.shape[-1] if x.shape[-1] else 0
         if (_is_concrete_mesh(mesh)
-                and (packed.shape[0] // tile_n) % wsize == 0):
+                and (packed.shape[0] // tile_n) % wsize == 0
+                and m_rows <= max(packed.shape[0], FUSED_SHARD_MAP_MAX_M)):
             DISPATCH_COUNTS["fused_shard_map"] += 1
             return _fused_decode_matmul_sharded(
                 x, packed, lut, out_dtype=out_dtype, impl=impl,
@@ -366,6 +392,7 @@ def tiled_decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
     legacy two-step 2D-TP path below.
     """
     from repro.sharding.partition import constrain
+    impl = _resolve_unfused(impl)
     unfused = impl == "unfused"
     inner_impl = "auto" if unfused else impl
     tile_n = getattr(packed, "tile_n", 0)
@@ -444,3 +471,117 @@ def _tiled_fused_sharded(x, packed, lut, *, out_dtype, impl: Impl,
     )(x2, packed.codes, packed.literals, packed.nlit, lut,
       packed.scale, packed.zero)
     return y.reshape(*lead, n)
+
+
+def grouped_fused_local(xe, packed, lut, *, out_dtype=jnp.bfloat16,
+                        impl: Impl = "auto"):
+    """Shard-local grouped expert fused matmul — no mesh dispatch.
+
+    ``packed`` is a stacked PackedLinear (leading expert axis on every
+    plane, tile-major layout); ``xe`` the matching (E, cap, K) token
+    blocks.  Runs the grouped Pallas megakernel (TPU/interpret) or its
+    vmapped strip-scan oracle directly, so it is safe inside shard_map
+    bodies that already own only their expert shard (the local-routing
+    MoE); callers outside shard_map should use
+    :func:`grouped_decode_dequant_matmul`, which adds mesh dispatch and
+    the probe counters.
+    """
+    tile_n, tile_k = packed.tile_n, packed.tile_k
+    assert tile_n and packed.codes.ndim == 3, (tile_n, packed.codes.shape)
+    use_kernel, interpret = _use_pallas(impl)
+    if use_kernel:
+        m = xe.shape[1]
+        bm = min(_fdm.DEFAULT_BM, max(m, 1))
+        xp, m0 = _pad_to(xe, 1, bm)
+        y = _fdm.grouped_fused_decode_matmul(
+            xp, packed.codes, packed.literals, lut, packed.scale,
+            packed.zero, shape=tuple(packed.shape), tile_n=tile_n,
+            tile_k=tile_k, bm=bm, out_dtype=out_dtype, interpret=interpret)
+        return y[:, :m0]
+    return ref.grouped_fused_decode_matmul(
+        xe, packed.codes, packed.literals, packed.nlit, lut,
+        packed.scale, packed.zero, shape=tuple(packed.shape),
+        tile_n=tile_n, tile_k=tile_k, out_dtype=out_dtype)
+
+
+def grouped_decode_dequant_matmul(xe, packed, lut, *,
+                                  out_dtype=jnp.bfloat16,
+                                  impl: Impl = "auto"):
+    """Per-expert compressed matmul y[e] = x[e] @ W[e].T — the MoE hot path.
+
+    ``packed`` is a repro.core.compressed.PackedLinear whose planes carry a
+    leading expert axis (codes (E, nb, slots), scale (E, N, 1), …); ``xe``
+    the capacity-gathered token blocks (E, cap, K) of the same expert
+    order.  This is the layer that keeps QMoE-class expert stacks —
+    where ~all the model's bytes live — compressed-resident in HBM.
+
+    Dispatch (tile-major planes, ``packed.tile_n > 0``):
+      * no mesh / 1 device  → grouped megakernel directly (expert grid
+        axis; ``fused_decode_matmul.grouped_fused_decode_matmul`` on TPU,
+        the vmapped strip-scan oracle elsewhere).
+      * active concrete mesh with experts dividing the model axis →
+        shard_map wrapper: experts stay on the model axis (expert
+        parallelism) — each device runs the grouped fused grid over its
+        resident E/model compressed planes and the output stays
+        expert-sharded for the caller's combine scatter.  Plane gathers
+        move compressed bytes, never dense experts (§Perf D1 economics).
+    Fallback (probe 'grouped_unfused'): linear-layout planes, expert
+    counts that don't divide the model axis, abstract meshes, and
+    ``impl='unfused'`` — materialize the dense expert stack, then einsum
+    (the benchmark baseline, and the only path that pays E·N·K dense
+    bytes).
+    """
+    impl = _resolve_unfused(impl)
+    unfused = impl == "unfused"
+    tile_n = getattr(packed, "tile_n", 0)
+    e = xe.shape[0]
+    if (not unfused and tile_n and lut is not None
+            and packed.codes.ndim == 3):
+        axis_sizes, mesh, ndev = _mesh_state()
+        if ndev <= 1:
+            DISPATCH_COUNTS["grouped_fused"] += 1
+            return grouped_fused_local(xe, packed, lut, out_dtype=out_dtype,
+                                       impl=impl)
+        msize = axis_sizes.get("model", 1)
+        if _is_concrete_mesh(mesh) and msize > 1 and e % msize == 0:
+            DISPATCH_COUNTS["grouped_fused_shard_map"] += 1
+            return _grouped_fused_sharded(xe, packed, lut,
+                                          out_dtype=out_dtype, impl=impl,
+                                          mesh=mesh)
+    DISPATCH_COUNTS["grouped_unfused"] += 1
+    assert lut is not None, \
+        "grouped_decode_dequant_matmul: compressed stacks need the decode LUT"
+    w = packed.materialize(lut, xe.dtype)             # (E, N, K) dense
+    return jnp.einsum("emk,enk->emn", xe, w).astype(out_dtype)
+
+
+def _grouped_fused_sharded(xe, packed, lut, *, out_dtype, impl: Impl, mesh):
+    """shard_map-wrapped grouped megakernel: expert-parallel fused MoE.
+
+    Experts split on the model axis for every plane and for the gathered
+    token blocks; each device launches the grouped fused grid over its
+    E/model resident compressed planes.  No reduction — the output stays
+    expert-sharded on model, exactly the layout the MoE combine scatter
+    constrains to (see ``layers.apply_moe``).
+    """
+    import dataclasses
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def local_fn(xl, codes, lits, nlit, lutl, scale, zero):
+        loc = dataclasses.replace(packed, codes=codes, literals=lits,
+                                  nlit=nlit, scale=scale, zero=zero)
+        return grouped_fused_local(xl, loc, lutl, out_dtype=out_dtype,
+                                   impl=impl)
+
+    espec = P("model", None, None)
+    y = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(espec, espec, P("model", None, None, None),
+                  P("model", None), P(None, None), espec, espec),
+        out_specs=espec,
+        check_rep=False,
+    )(xe, packed.codes, packed.literals, packed.nlit, lut,
+      packed.scale, packed.zero)
+    return y

@@ -6,6 +6,8 @@ backends ``ops.py`` dispatches here.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -139,6 +141,25 @@ def fused_decode_matmul(x, codes, literals, nlit, lut, scale, zero, *,
     sumx = jnp.sum(x.astype(jnp.float32), axis=1, keepdims=True)   # (M, 1)
     y = scale.reshape(1, -1) * (acc - sumx * zero.reshape(1, -1))
     return y.astype(out_dtype)
+
+
+def grouped_fused_decode_matmul(x, codes, literals, nlit, lut, scale, zero,
+                                *, shape, tile_n: int, tile_k: int,
+                                out_dtype=jnp.float32) -> jax.Array:
+    """Oracle for the grouped expert megakernel.
+
+    Per-expert fused decode→dequant→matmul over a stacked expert weight:
+    x (E, M, K) capacity-gathered token blocks, codes (E, nb, slots) /
+    literals (E, nb, cap, S) / nlit (E, nb) stacked tile-major planes of
+    the per-expert dense ``shape = (N, K)``, scale/zero (E, N, 1).  The
+    expert axis vmaps over :func:`fused_decode_matmul` (one shared LUT),
+    so the semantics are exactly "strip-scan fused matmul, per plane" and
+    the dense expert stack is never materialized.
+    """
+    fn = functools.partial(fused_decode_matmul, shape=tuple(shape),
+                           tile_n=tile_n, tile_k=tile_k, out_dtype=out_dtype)
+    return jax.vmap(lambda xe, c, l, nl, s, z: fn(xe, c, l, nl, lut, s, z))(
+        x, codes, literals, nlit, scale, zero)
 
 
 def attention_naive(q: jax.Array, k: jax.Array, v: jax.Array,

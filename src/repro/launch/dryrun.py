@@ -119,7 +119,15 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
             tiles = 16 if (arch_id in FSDP_SERVE and mode == "compressed"
                            and kind == "decode") else 0
             policy = CompressionPolicy(mode=mode, tiles=tiles)
-            pspecs, lut = serve_param_specs(cfg, policy, param_dtype)
+            # weight-axis size (pod×model): the fused tile choice divides
+            # the per-shard out dim so lowering takes the shard-mapped
+            # fused megakernel paths, not the two-step fallback
+            wshards = 1
+            for a in ("pod", "model"):
+                if a in mesh.axis_names:
+                    wshards *= mesh.shape[a]
+            pspecs, lut = serve_param_specs(cfg, policy, param_dtype,
+                                            model_shards=wshards)
             # NOTE(§Perf, refuted): pod_in_fsdp=False (weights replicated
             # across pods) raised kimi/llama multi-pod prefill HBM by
             # 2-4%, so pod-extended FSDP stays on for serve.

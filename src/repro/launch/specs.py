@@ -52,8 +52,20 @@ def dense_param_specs(cfg, dtype=jnp.bfloat16) -> Any:
 
 
 def serve_param_specs(cfg, policy: CompressionPolicy,
-                      dtype=jnp.bfloat16) -> tuple[Any, Any]:
-    """(param specs with containers, lut spec or None)."""
+                      dtype=jnp.bfloat16,
+                      model_shards: int = 1) -> tuple[Any, Any]:
+    """(param specs with containers, lut spec or None).
+
+    ``model_shards``: intended weight-axis size (model×pod) of the serving
+    mesh — planned planes then carry the fused tile-major layout whose
+    tiles divide the per-shard out dim (``choose_fused_tiles(shards=…)``),
+    exactly like ``engine.build_serve_params(model_shards=…)``, so the
+    dry-run lowers the fused megakernel paths, not the two-step fallback.
+    Stacked expert leaves keep stacked PackedLinear planes (never 2D-TP
+    column tiles) so the grouped expert megakernel path stays reachable.
+    """
+    from repro.core.blocked_codec import choose_fused_tiles
+
     dense = dense_param_specs(cfg, dtype)
     flat, treedef = jax.tree_util.tree_flatten_with_path(dense)
     out, any_compressed = [], False
@@ -69,16 +81,27 @@ def serve_param_specs(cfg, policy: CompressionPolicy,
             out.append(planned_quant_specs(shape2, stacked=lead))
         elif act == "compressed":
             any_compressed = True
-            if policy.tiles > 1 and shape2[1] % policy.tiles == 0:
+            if (policy.tiles > 1 and shape2[1] % policy.tiles == 0
+                    and "experts" not in name):
+                in_t = shape2[1] // policy.tiles
+                picked = choose_fused_tiles((shape2[0], in_t),
+                                            policy.block_weights,
+                                            shards=(model_shards, 1))
+                tn, tk = picked[:2] if picked else (0, 0)
                 out.append(planned_tiled_specs(
                     shape2, policy.tiles, stacked=lead,
-                    block_weights=policy.block_weights))
+                    block_weights=policy.block_weights,
+                    tile_n=tn, tile_k=tk))
             else:
                 from repro.sharding.partition import (clean_keystr,
                                                       is_row_parallel)
+                picked = choose_fused_tiles(shape2, policy.block_weights,
+                                            shards=(model_shards, 1))
+                tn, tk = picked[:2] if picked else (0, 0)
                 pl = planned_packed_specs(
                     shape2, stacked=lead,
-                    block_weights=policy.block_weights)
+                    block_weights=policy.block_weights,
+                    tile_n=tn, tile_k=tk)
                 pl.row_parallel = is_row_parallel(clean_keystr(name))
                 out.append(pl)
         else:

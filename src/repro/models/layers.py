@@ -10,7 +10,12 @@ decode→dequant→matmul megakernel through ``ops.decode_dequant_matmul`` /
 ``ops.tiled_decode_dequant_matmul`` on single devices AND under sharded
 meshes (a shard_map wrapper splits the fused grid per device; see the
 mesh-dispatch rules on those ops) — the dense weight never materializes;
-pass ``impl='unfused'`` to force the legacy two-step path.
+pass ``impl='unfused'`` to force the legacy two-step path.  Stacked MoE
+expert weights — where ~all of a QMoE-class model's bytes live — go
+through the grouped expert megakernel (``_expert_ffn`` →
+``ops.grouped_decode_dequant_matmul``), so the compressed-resident
+invariant holds for expert stacks too: peak HBM = compressed experts +
+gathered activations + one VMEM tile.
 
 Param trees are plain nested dicts so that (a) ``lax.scan`` over stacked
 layers works out of the box, (b) sharding rules match on path names, and
@@ -18,6 +23,7 @@ layers works out of the box, (b) sharding rules match on path names, and
 """
 from __future__ import annotations
 
+import collections
 import math
 from typing import Any, Optional
 
@@ -52,12 +58,31 @@ def linear(x: jax.Array, w, lut=None, bias=None, impl: str = "auto"):
     return y
 
 
+# Trace-time materialization probe: which container classes decoded to a
+# dense HBM tensor, keyed by kind ('packed', 'packed_stacked', 'tiled',
+# 'quant').  'packed_stacked' is the expert-plane key — the grouped fused
+# MoE path must keep it at zero (the acceptance invariant "zero
+# materialize_weight calls on expert planes"); tests assert on it.
+MATERIALIZE_COUNTS = collections.Counter()
+
+
 def materialize_weight(w, lut=None, dtype=None):
-    """Dense view of any weight container (used by vmapped expert matmuls)."""
+    """Dense view of any weight container (unfused fallbacks, MLA absorb).
+
+    ``dtype`` is honored identically on every container branch —
+    ``None`` decodes PackedLinear/TiledPackedLinear *and* QuantLinear to
+    bf16 (and leaves dense weights untouched); an explicit dtype is passed
+    through unchanged everywhere.
+    """
     if isinstance(w, (PackedLinear, TiledPackedLinear)):
-        return w.materialize(lut, dtype or jnp.bfloat16)
+        kind = "tiled" if isinstance(w, TiledPackedLinear) else "packed"
+        if w.codes.ndim > (3 if kind == "tiled" else 2):
+            kind += "_stacked"
+        MATERIALIZE_COUNTS[kind] += 1
+        return w.materialize(lut, jnp.bfloat16 if dtype is None else dtype)
     if isinstance(w, QuantLinear):
-        return w.materialize(dtype or jnp.bfloat16)
+        MATERIALIZE_COUNTS["quant"] += 1
+        return w.materialize(jnp.bfloat16 if dtype is None else dtype)
     return w if dtype is None else w.astype(dtype)
 
 
@@ -284,6 +309,20 @@ def apply_attention(p: Params, x: jax.Array, cfg, *, lut=None,
         o = _attend_full(q, k, v, causal, impl, kv_chunk=kvc)
         new_cache = None
     else:
+        if t == 1:
+            # Decode: the fused shard-mapped projections emit y
+            # column-sharded on model; reshaped to (B, 1, H, hd) that is an
+            # inexpressible (heads × head_dim) fragment, and SPMD
+            # reconciles it with the cache layout by fully rematerializing
+            # the multi-GiB KV cache every step (dry-run decode
+            # collectives 6 MiB → 1.3 TiB when unpinned).  Pin the tiny
+            # fresh q/k/v to the cache's head placement — heads on model
+            # when they divide, else replicated (constrain drops
+            # non-dividing axes) — so the cache keeps its spec-time
+            # sharding through the update.
+            q = constrain(q, _BATCH, None, "model", None)
+            k = constrain(k, _BATCH, None, "model", None)
+            v = constrain(v, _BATCH, None, "model", None)
         int8_kv = cache["k"].dtype == jnp.int8
         if int8_kv:
             kq, ks = _quant_kv(k)
@@ -525,8 +564,52 @@ def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float) -> int:
     return max(4, min(c, n_tokens))
 
 
+def _grouped_fused_ok(w, lut) -> bool:
+    """True when an expert stack can take the grouped fused megakernel:
+    a stacked PackedLinear (leading expert axis) in tile-major layout with
+    a decode LUT in hand."""
+    return (isinstance(w, PackedLinear) and getattr(w, "tile_n", 0) > 0
+            and w.codes.ndim == 3 and lut is not None)
+
+
+def _expert_ffn(experts: Params, xe: jax.Array, lut=None,
+                impl: str = "auto", *, local: bool = False) -> jax.Array:
+    """SwiGLU over capacity-gathered per-expert token blocks (E, cap, d).
+
+    The three expert matmuls route through the grouped fused
+    decode→dequant→matmul megakernel whenever the stack is a compressed
+    PackedLinear — dense expert weights never materialize in HBM
+    (``ops.grouped_decode_dequant_matmul``, which also owns the mesh
+    dispatch, the unfused fallback, and the 'grouped_*' probes).
+    ``local=True`` marks a caller already inside a shard_map that owns
+    only its expert shard (the local-routing MoE): the shard-local
+    ``ops.grouped_fused_local`` runs directly, no nested mesh dispatch —
+    the caller gates eligibility before choosing this path.  Dense and
+    QuantLinear stacks fall back to materialize + einsum.
+    """
+    def mm(h, w):
+        if isinstance(w, PackedLinear) and w.codes.ndim == 3 \
+                and lut is not None:
+            if local:
+                if _grouped_fused_ok(w, lut):
+                    return ops.grouped_fused_local(
+                        h, w, lut, out_dtype=h.dtype, impl=impl)
+                # linear-layout stack inside shard_map: materialize the
+                # local shard below (no probe — ops owns probes)
+            else:
+                return ops.grouped_decode_dequant_matmul(
+                    h, w, lut, out_dtype=h.dtype, impl=impl)
+        return jnp.einsum("ecx,eyx->ecy", h,
+                          materialize_weight(w, lut, h.dtype))
+
+    g = mm(xe, experts["w_gate"])
+    u = mm(xe, experts["w_up"])
+    return mm(jax.nn.silu(g) * u, experts["w_down"])
+
+
 def _moe_compute(xf, router_w, wg, wu, wd, cfg, n_experts: int,
-                 expert_offset, *, expert_mask_only: bool = False):
+                 expert_offset, *, lut=None, impl: str = "auto",
+                 local: bool = False):
     """Core top-k dispatch + expert FFN over a token matrix (n_tok, d).
 
     ``n_experts``/``expert_offset``: the LOCAL expert range this caller
@@ -535,7 +618,12 @@ def _moe_compute(xf, router_w, wg, wu, wd, cfg, n_experts: int,
     FULL expert set so gates are identical across shards; slots routed
     outside [offset, offset+n_experts) are dropped locally (they are
     served by the owning shard).
-    Returns (y (n_tok, d), aux_loss, probs).
+
+    ``wg``/``wu``/``wd`` may be dense (local) arrays or stacked weight
+    containers — the expert FFN goes through :func:`_expert_ffn`, so
+    compressed stacks hit the grouped fused megakernel instead of
+    materializing (``local`` marks shard_map callers).
+    Returns (y (n_tok, d), aux_loss).
     """
     n_tok, d = xf.shape
     e_full = router_w.shape[0]
@@ -578,9 +666,8 @@ def _moe_compute(xf, router_w, wg, wu, wd, cfg, n_experts: int,
 
     xpad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
     xe = xpad[table]                                       # (e_loc, cap, d)
-    g = jnp.einsum("ecd,efd->ecf", xe, wg)
-    u = jnp.einsum("ecd,efd->ecf", xe, wu)
-    ye = jnp.einsum("ecf,edf->ecd", jax.nn.silu(g) * u, wd)
+    ye = _expert_ffn({"w_gate": wg, "w_up": wu, "w_down": wd}, xe,
+                     lut, impl, local=local)
 
     out = jnp.zeros((n_tok + 1, d), xf.dtype)
     out = out.at[table].add(ye.astype(xf.dtype) *
@@ -598,6 +685,14 @@ def apply_moe_local(p: Params, x: jax.Array, cfg, *, lut=None,
     dense global dispatch (full-token gathers + f32 (E,cap,d) combine
     all-reduces).  Capacity is per-(token-shard, expert): slightly
     different drop behaviour than the global path; equal when dropless.
+
+    Compressed expert stacks (tile-major stacked PackedLinear) enter the
+    shard_map as *planes* — expert axis on "model" — and each device runs
+    the grouped fused decode→dequant→matmul megakernel over its resident
+    E/model compressed slab (probe 'grouped_fused_shard_map'): dense
+    expert weights never exist, on any device.  Other containers keep the
+    legacy shape: materialize the dense stack outside, shard it on the
+    expert dim.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -608,38 +703,59 @@ def apply_moe_local(p: Params, x: jax.Array, cfg, *, lut=None,
     e_full = cfg.n_experts
     b, t, d = x.shape
     batch_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
-    wg = materialize_weight(p["experts"]["w_gate"], lut, x.dtype)
-    wu = materialize_weight(p["experts"]["w_up"], lut, x.dtype)
-    wd = materialize_weight(p["experts"]["w_down"], lut, x.dtype)
+    experts = p["experts"]
+    # resolve the session-default 'unfused' lever here too: the grouped
+    # gate below decides the path before any ops entry point would
+    impl = ops._resolve_unfused(impl)
+    grouped = (impl != "unfused" and e_full % msize == 0
+               and all(_grouped_fused_ok(experts[k], lut)
+                       for k in ("w_gate", "w_up", "w_down")))
     router_w = materialize_weight(p["router"], lut, jnp.float32)
 
     espec = P("model", None, None)
     xspec = P(batch_axes if batch_axes else None, None, None)
 
-    def local_fn(x_loc, rw, wg_l, wu_l, wd_l):
+    def local_fn(x_loc, rw, lut_l, wg_l, wu_l, wd_l):
         bl, tl, _ = x_loc.shape
         xf = x_loc.reshape(bl * tl, d)
         midx = jax.lax.axis_index("model")
         y, aux = _moe_compute(xf, rw, wg_l, wu_l, wd_l, cfg,
-                              e_full // msize, midx * (e_full // msize))
+                              e_full // msize, midx * (e_full // msize),
+                              lut=lut_l, impl=impl, local=grouped)
         y = jax.lax.psum(y.astype(x_loc.dtype), "model")
         aux = jax.lax.pmean(aux, "model")
         if batch_axes:
             aux = jax.lax.pmean(aux, batch_axes)
         return y.reshape(bl, tl, d), aux
 
+    if grouped:
+        # Compressed planes cross into the shard_map expert-sharded: the
+        # induced gather moves compressed bytes, never dense experts.
+        ops.DISPATCH_COUNTS["grouped_fused_shard_map"] += 1
+        wg_in, wu_in, wd_in = (experts[k]
+                               for k in ("w_gate", "w_up", "w_down"))
+        wspecs = tuple(
+            jax.tree_util.tree_map(
+                lambda a: P(*(("model",) + (None,) * (a.ndim - 1))), w)
+            for w in (wg_in, wu_in, wd_in))
+        lut_in, lspec = lut, P(None, None)
+    else:
+        wg_in, wu_in, wd_in = (
+            jax.lax.with_sharding_constraint(
+                materialize_weight(experts[k], lut, x.dtype),
+                jax.NamedSharding(mesh, espec))
+            for k in ("w_gate", "w_up", "w_down"))
+        wspecs = (espec, espec, espec)
+        # dense path never touches the LUT inside; a 1-byte dummy keeps the
+        # shard_map signature uniform
+        lut_in, lspec = jnp.zeros((1, 1), jnp.uint8), P(None, None)
+
     y, aux = shard_map(
         local_fn, mesh=mesh,
-        in_specs=(xspec, P(None, None), espec, espec, espec),
+        in_specs=(xspec, P(None, None), lspec) + wspecs,
         out_specs=(xspec, P()),
         check_rep=False,
-    )(x, router_w,
-      jax.lax.with_sharding_constraint(
-          wg, jax.NamedSharding(mesh, espec)),
-      jax.lax.with_sharding_constraint(
-          wu, jax.NamedSharding(mesh, espec)),
-      jax.lax.with_sharding_constraint(
-          wd, jax.NamedSharding(mesh, espec)))
+    )(x, router_w, lut_in, wg_in, wu_in, wd_in)
 
     if "shared" in p:
         y = y + apply_mlp(p["shared"], x.reshape(b * t, d), lut=lut,
@@ -728,12 +844,11 @@ def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto"):
             (p["experts"]["w_gate"], p["experts"]["w_up"],
              p["experts"]["w_down"], xe))
     else:
-        wg = materialize_weight(p["experts"]["w_gate"], lut, x.dtype)
-        wu = materialize_weight(p["experts"]["w_up"], lut, x.dtype)
-        wd = materialize_weight(p["experts"]["w_down"], lut, x.dtype)
-        g = jnp.einsum("ecd,efd->ecf", xe, wg)
-        u = jnp.einsum("ecd,efd->ecf", xe, wu)
-        ye = jnp.einsum("ecf,edf->ecd", jax.nn.silu(g) * u, wd)  # (e, cap, d)
+        # Grouped fused expert FFN: compressed stacks stream through the
+        # expert-grid megakernel (shard-mapped onto the model axis under a
+        # concrete mesh) instead of materializing (E, ffe, d) dense — see
+        # _expert_ffn / ops.grouped_decode_dequant_matmul.
+        ye = _expert_ffn(p["experts"], xe, lut, impl)      # (e, cap, d)
 
     ye = constrain(ye, "model", None, None)
     out = jnp.zeros((n_tok + 1, d), x.dtype)

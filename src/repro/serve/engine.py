@@ -9,7 +9,13 @@ Pipeline (paper §2.3 "inference", adapted per DESIGN.md §2):
      weights on demand inside the forward graph via the fused
      decode→dequant→matmul megakernel (kernels/fused_decode_matmul.py),
      so peak HBM = compressed model + KV cache + one VMEM tile — the
-     paper's "decompress layer by layer", tile-granular on TPU.
+     paper's "decompress layer by layer", tile-granular on TPU.  MoE
+     expert stacks — where ~all of a QMoE-class model's bytes live — go
+     through the grouped expert megakernel (one launch per stacked
+     expert weight, expert grid axis; ``ops.grouped_decode_dequant_
+     matmul``), extending the memory invariant to experts: peak HBM =
+     compressed experts + capacity-gathered activations + one VMEM tile,
+     with dense expert weights never materialized on any device.
      ``generate`` runs the whole decode phase under one jitted
      ``lax.scan`` so the kernel executes back-to-back with no per-token
      host sync or retrace.
@@ -73,8 +79,12 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
     fused tile choice then divides the per-shard out dim so sharded
     serving dispatches to the shard-mapped fused megakernel instead of
     falling back to the two-step path (see ``ops.decode_dequant_matmul``).
-    ``policy.tiles > 1`` stores eligible weights as TiledPackedLinear
-    column tiles (2D-TP resident storage, §Perf D2), also tile-major.
+    The same divisor is applied to stacked expert planes, so the per-model
+    -shard slice of ``moe_d_ff`` stays tile-aligned for the grouped expert
+    megakernel.  ``policy.tiles > 1`` stores eligible weights as
+    TiledPackedLinear column tiles (2D-TP resident storage, §Perf D2),
+    also tile-major — except expert stacks, which stay stacked
+    PackedLinear (grouped-kernel eligible).
     """
     qcfg = qcfg or QuantConfig(bits=policy.bits, granularity="per_channel")
     bw = block_weights or policy.block_weights
@@ -128,8 +138,13 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
                 lead + (leaf.shape[-2], 1))
             new_leaves.append(QuantLinear(vals, sc, zr))
             n_bytes["quant"] += int(vals.nbytes + sc.nbytes + zr.nbytes)
-        elif (policy.tiles > 1 and leaf.shape[-1] % policy.tiles == 0):
+        elif (policy.tiles > 1 and leaf.shape[-1] % policy.tiles == 0
+              and "experts" not in jax.tree_util.keystr(path)):
             # 2D-TP column-tile storage, fused tile-major per tile.
+            # Expert stacks are excluded: they stay stacked PackedLinear so
+            # the grouped expert megakernel keeps them compressed-resident
+            # under expert parallelism (column tiles would strand them on
+            # the dense-materialize path).
             per = [encode_tiled_planes(
                 np.asarray(q.values, dtype=np.uint8), table,
                 np.asarray(lut), policy.tiles, block_weights=bw,

@@ -174,6 +174,22 @@ def _spec_for_plane(path_str: str, plane: str, shape: tuple,
             axis = _resolve_axis(out_tag, scfg, mesh.axis_names)
             fsdp = _resolve_axis("F", scfg, mesh.axis_names)
             stacked = len(shape) - _plane_rank(plane)
+            if stacked and re.search(r"experts/", base) and plane in (
+                    "codes", "literals", "nlit", "scale", "zero"):
+                # Grouped fused MoE (PR 3): expert planes store
+                # expert-major — the stacked E dim on model — so the
+                # grouped shard_map's in_specs (experts on the model axis)
+                # match storage and no plane bytes move at use time; the
+                # block axis keeps the FSDP axes for 1T-scale stacks.
+                # Unlike §Perf DP2's refuted E-instead-of-blocks variant,
+                # both shardings hold at once here.
+                m_axis = (AXIS_MODEL if AXIS_MODEL in mesh.axis_names
+                          else None)
+                blk = fsdp if plane in ("codes", "literals", "nlit") \
+                    else None
+                dims = ((None,) * (stacked - 1) + (m_axis, blk) +
+                        (None,) * (_plane_rank(plane) - 1))
+                return _guarded_spec(dims, shape, mesh)
             if plane in ("codes_t", "literals_t", "nlit_t"):
                 # 2D tiles: tile axis on data, block axis on model —
                 # weights permanently resident, zero use-time collectives.

@@ -27,6 +27,22 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(autouse=True)
+def _reset_probe_counters():
+    """The trace-time probes (``ops.DISPATCH_COUNTS``,
+    ``engine.TRACE_COUNTS``, ``layers.MATERIALIZE_COUNTS``) are global
+    Counters asserted by tests; reset them between tests so probe
+    assertions can't leak across modules (a prior test's traces otherwise
+    satisfy — or break — a later test's expectations)."""
+    from repro.kernels import ops
+    from repro.models import layers
+    from repro.serve import engine
+    for counter in (ops.DISPATCH_COUNTS, engine.TRACE_COUNTS,
+                    layers.MATERIALIZE_COUNTS):
+        counter.clear()
+    yield
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running test")
     impl = os.environ.get("REPRO_TEST_IMPL")
