@@ -1,0 +1,159 @@
+"""Resilience-path costs: integrity-verify overhead and per-rung serving.
+
+Two questions an operator needs numbers for before turning the knobs on:
+
+  * **What does ``--verify`` cost at boot?** ``verify_overhead`` times the
+    manifest build + 'full'/'fast' re-hash + device invariant check against
+    the pack time itself, per model bytes.  Full verification re-hashes
+    every byte and must still be a small fraction of packing (the
+    acceptance bar: < 10% of pack wall time); 'fast' is the sampled-digest
+    bound for very large artifacts.
+  * **What does each degradation rung cost while serving?**
+    ``ladder_generate`` measures end-to-end greedy ``generate`` tokens/s on
+    every rung of the ladder — fused megakernel, two-step unfused,
+    pure-jnp materialize — via the session impl lever with a renamed cfg
+    (jit caches key on the config), i.e. exactly how ``ResilientEngine``
+    re-traces a fallback.
+
+``resilience_json`` bundles both into ``BENCH_resilience.json`` for the
+CI artifact trail.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.integrity import (build_manifest, check_invariants,
+                                  verify_serve_state)
+from repro.core.policy import CompressionPolicy
+from repro.kernels import ops
+from repro.serve.engine import build_serve_params, generate
+from repro.serve.resilience import ResiliencePolicy
+
+from .common import emit, trained_tiny_model
+
+_LADDER = ResiliencePolicy().ladder
+
+
+def verify_overhead(rows: list | None = None, steps: int = 40):
+    """Manifest build + verify('full'/'fast') + invariants vs pack time."""
+    cfg, params, _ = trained_tiny_model(steps=steps)
+    pol = CompressionPolicy(mode="compressed", min_weight_size=1024)
+
+    t0 = time.perf_counter()
+    st = build_serve_params(params, pol, manifest=False)
+    t_pack = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    mf = build_manifest(st.params, st.lut, st.table)
+    t_manifest = time.perf_counter() - t0
+    st = dataclasses.replace(st, manifest=mf)
+
+    t0 = time.perf_counter()
+    rep_full = verify_serve_state(st, level="full")
+    t_full = time.perf_counter() - t0
+    assert rep_full.ok, rep_full.corrupt
+
+    t0 = time.perf_counter()
+    rep_fast = verify_serve_state(st, level="fast")
+    t_fast = time.perf_counter() - t0
+    assert rep_fast.ok, rep_fast.corrupt
+
+    t0 = time.perf_counter()
+    rep_inv = check_invariants(st)
+    t_inv = time.perf_counter() - t0
+    assert rep_inv.ok, rep_inv.corrupt
+
+    model_bytes = mf["total_bytes"]
+    emit("resilience.pack_s", f"{t_pack:.3f}",
+         f"{model_bytes/2**20:.2f} MiB compressed artifact")
+    emit("resilience.manifest_build_s", f"{t_manifest:.4f}",
+         f"{t_manifest/t_pack:.3%} of pack")
+    emit("resilience.verify_full_s", f"{t_full:.4f}",
+         f"{t_full/t_pack:.3%} of pack, {rep_full.bytes_hashed} B hashed")
+    emit("resilience.verify_fast_s", f"{t_fast:.4f}",
+         f"{t_fast/t_pack:.3%} of pack, sampled digests")
+    emit("resilience.invariants_s", f"{t_inv:.4f}",
+         f"device-side structural check, {rep_inv.checked} planes")
+    if rows is not None:
+        rows.append(dict(bench="verify_overhead", model_bytes=model_bytes,
+                         pack_s=t_pack, manifest_build_s=t_manifest,
+                         verify_full_s=t_full, verify_fast_s=t_fast,
+                         invariants_s=t_inv,
+                         full_bytes_hashed=rep_full.bytes_hashed,
+                         fast_bytes_hashed=rep_fast.bytes_hashed,
+                         full_over_pack=t_full / t_pack,
+                         fast_over_pack=t_fast / t_pack))
+    return t_full / t_pack
+
+
+def ladder_generate(rows: list | None = None):
+    """Greedy generate tokens/s on each degradation rung (llama smoke).
+
+    Each fallback rung re-traces under a suffixed cfg name with the impl
+    lever pinned — the same mechanics ``ResilientEngine._run_rung`` uses,
+    so these are the real costs of serving degraded."""
+    cfg, params, _ = trained_tiny_model(steps=20)
+    st = build_serve_params(params, CompressionPolicy(
+        mode="compressed", min_weight_size=1024))
+    toks = jnp.ones((4, 8), jnp.int32)
+    max_new = 8
+    prev = ops._DEFAULT_IMPL
+    base = None
+    for rung in _LADDER:
+        cfg_v = (cfg if rung == _LADDER[0] else
+                 dataclasses.replace(cfg, name=f"{cfg.name}+{rung}"))
+        try:
+            if rung != _LADDER[0]:
+                ops.set_default_impl(rung)
+            ops.DISPATCH_COUNTS.clear()
+            # warmup (trace) + 3 timed calls
+            jax.block_until_ready(generate(st.params, cfg_v, toks,
+                                           lut=st.lut, max_new=max_new))
+            ts = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                jax.block_until_ready(generate(st.params, cfg_v, toks,
+                                               lut=st.lut, max_new=max_new))
+                ts.append(time.perf_counter() - t0)
+            t = sorted(ts)[len(ts) // 2]
+            disp = dict(ops.DISPATCH_COUNTS)
+        finally:
+            ops.set_default_impl(prev)
+        tps = toks.shape[0] * max_new / t
+        base = base or tps
+        emit(f"resilience.generate8.{rung}_s", f"{t:.4f}",
+             f"{tps:.1f} tok/s ({tps/base:.2f}x fused rung)")
+        if rows is not None:
+            rows.append(dict(bench="ladder_generate", rung=rung, wall_s=t,
+                             tokens_per_s=tps, rel_to_fused=tps / base,
+                             dispatch=disp))
+
+
+def resilience_json(path: str = "BENCH_resilience.json"):
+    """Machine-readable resilience artifact: verify overhead vs model
+    bytes + per-rung generate throughput."""
+    rows: list = []
+    full_over_pack = verify_overhead(rows)
+    ladder_generate(rows)
+    payload = {"schema": 1, "bench": "resilience",
+               "backend": jax.default_backend(),
+               "host_devices": jax.device_count(),
+               "full_verify_over_pack": full_over_pack,
+               "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit("resilience.json_rows", str(len(rows)), path)
+    return payload
+
+
+def main():
+    resilience_json()
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@ from .compressed import (QuantLinear, PackedLinear, quantize_linear,
                          pack_linear, planned_packed_specs,
                          planned_quant_specs, lut_spec)
 from .policy import CompressionPolicy
+from .integrity import (IntegrityError, IntegrityReport, build_manifest,
+                        check_invariants, verify_serve_state)
 
 __all__ = [
     "QuantConfig", "QuantizedTensor", "TernaryTensor", "quantize",
@@ -28,4 +30,6 @@ __all__ = [
     "QuantLinear", "PackedLinear", "quantize_linear", "pack_linear",
     "planned_packed_specs", "planned_quant_specs", "lut_spec",
     "CompressionPolicy",
+    "IntegrityError", "IntegrityReport", "build_manifest",
+    "check_invariants", "verify_serve_state",
 ]

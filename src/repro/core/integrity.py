@@ -1,0 +1,311 @@
+"""Artifact integrity — checksummed serve params + device-side invariants.
+
+Dictionary compression amplifies faults: one flipped bit in a PackedLinear
+code plane mis-indexes the LUT and silently corrupts an entire decoded
+tile — a failure mode dense checkpoints don't have.  A serving host with
+flash-backed storage and no network to re-download weights must therefore
+be able to *prove* the artifact it loaded is the artifact that was packed.
+
+Two complementary layers (neither subsumes the other):
+
+  * **Host-side manifest** (``build_manifest`` / ``verify_serve_state``):
+    per-plane CRC32 digests over every compressed/quantized plane (codes,
+    literals, nlit, scale, zero), the model-wide LUT and the dictionary
+    table, recorded at pack time on ``ServeState.manifest``.  ``level=
+    'full'`` re-hashes every byte (ground truth — catches *any* flip);
+    ``level='fast'`` fully hashes small planes and strided-samples large
+    ones (bounded time, probabilistic detection — the boot-time check).
+    Corrupted leaves are *named* per plane and quarantined in the report,
+    never silently decoded.
+  * **Device-side invariants** (``check_invariants``): a cheap jittable
+    structural check that can run on-accelerator before the first prefill
+    — every code indexes inside the LUT (or is ESCAPE), every nlit fits
+    the literal capacity, every scale/zero is finite.  Catches the
+    corruption class that crashes or NaN-poisons a decode; a flip that
+    lands *inside* the valid code range is invisible here and is exactly
+    what the CRC layer exists for.
+
+``serve.resilience.ResilientEngine`` runs both per its policy and refuses
+to serve from a quarantined artifact (the integrity invariant documented
+in ``serve/engine.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .codec import ESCAPE
+from .compressed import PackedLinear, QuantLinear, TiledPackedLinear
+
+# fast-level policy: planes at or below this are fully hashed even in
+# 'fast' mode; larger planes hash a strided byte sample of about this size.
+FAST_FULL_MAX = 1 << 18
+_FAST_SAMPLE = 1 << 16
+
+MANIFEST_VERSION = 1
+
+
+class IntegrityError(RuntimeError):
+    """Raised when a quarantined (corrupt) artifact would otherwise serve."""
+
+    def __init__(self, report: "IntegrityReport"):
+        self.report = report
+        super().__init__("artifact integrity check failed: "
+                         + "; ".join(f"{leaf}[{plane}]: {reason}"
+                                     for leaf, plane, reason in report.corrupt))
+
+
+@dataclasses.dataclass
+class IntegrityReport:
+    level: str
+    ok: bool
+    corrupt: list            # [(leaf, plane, reason)] — named, per plane
+    checked: int             # planes compared
+    bytes_hashed: int
+    elapsed_s: float
+
+    @property
+    def quarantined(self) -> list:
+        """Sorted unique leaf names that must not be decoded."""
+        return sorted({leaf for leaf, _, _ in self.corrupt})
+
+    def summary(self) -> str:
+        if self.ok:
+            return (f"verify[{self.level}]: ok — {self.checked} planes, "
+                    f"{self.bytes_hashed / 2**20:.1f} MiB hashed in "
+                    f"{self.elapsed_s * 1e3:.1f} ms")
+        return (f"verify[{self.level}]: CORRUPT — "
+                f"{len(self.corrupt)} plane(s) in "
+                f"{len(self.quarantined)} leaf(s): "
+                + "; ".join(f"{l}[{p}]: {r}" for l, p, r in self.corrupt))
+
+
+def _u8_view(arr) -> np.ndarray:
+    """Host byte view of any array leaf (contiguous, flat uint8)."""
+    a = np.ascontiguousarray(np.asarray(jax.device_get(arr)))
+    if a.size == 0:
+        return np.zeros(0, np.uint8)
+    return a.reshape(-1).view(np.uint8)
+
+
+def _crc_full(u8: np.ndarray) -> int:
+    return zlib.crc32(u8) & 0xFFFFFFFF
+
+
+def _crc_fast(u8: np.ndarray) -> int:
+    """Strided-sample digest for large planes (bounded hash time).
+
+    Detects truncation/garbling with near certainty; a *single* bit flip
+    is caught only if it lands on a sampled byte — use level='full' for
+    ground truth.  Length is mixed in so same-sample truncations differ.
+    """
+    n = u8.size
+    if n <= FAST_FULL_MAX:
+        return _crc_full(u8)
+    stride = max(1, n // _FAST_SAMPLE)
+    sample = np.ascontiguousarray(u8[::stride])
+    head = u8[:256]
+    tail = np.ascontiguousarray(u8[-256:])
+    c = zlib.crc32(n.to_bytes(8, "little"))
+    for part in (head, sample, tail):
+        c = zlib.crc32(part, c)
+    return c & 0xFFFFFFFF
+
+
+def _table_crc(table: Optional[dict]) -> Optional[int]:
+    if table is None:
+        return None
+    c = 0
+    for seq, code in sorted(table.items(), key=lambda kv: kv[1]):
+        c = zlib.crc32(bytes(seq) + int(code).to_bytes(4, "little"), c)
+    return c & 0xFFFFFFFF
+
+
+def _iter_plane_leaves(params):
+    """Yield (name, array) for every array leaf, plane-granular.
+
+    PackedLinear/TiledPackedLinear/QuantLinear register their planes as
+    keyed children, so ``tree_flatten_with_path`` already names each plane
+    (``...['w_gate'].codes``) — the manifest keys on those full paths.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    for path, leaf in flat:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            yield jax.tree_util.keystr(path), leaf
+
+
+def _plane_entry(arr) -> dict:
+    u8 = _u8_view(arr)
+    return {
+        "shape": [int(s) for s in np.asarray(arr).shape],
+        "dtype": str(np.asarray(arr).dtype),
+        "nbytes": int(u8.size),
+        "crc32": _crc_full(u8),
+        "crc32_fast": _crc_fast(u8),
+    }
+
+
+def build_manifest(params: Any, lut=None, table: Optional[dict] = None) -> dict:
+    """Per-plane integrity manifest of a served param tree (host side).
+
+    JSON-serializable; stored on ``ServeState.manifest`` by
+    ``serve.engine.build_serve_params``.
+    """
+    t0 = time.perf_counter()
+    leaves = {}
+    total = 0
+    for name, arr in _iter_plane_leaves(params):
+        entry = _plane_entry(arr)
+        leaves[name] = entry
+        total += entry["nbytes"]
+    lut_entry = None
+    if lut is not None:
+        lut_entry = _plane_entry(lut)
+        total += lut_entry["nbytes"]
+    return {
+        "version": MANIFEST_VERSION,
+        "leaves": leaves,
+        "lut": lut_entry,
+        "table_crc32": _table_crc(table),
+        "total_bytes": total,
+        "build_s": time.perf_counter() - t0,
+    }
+
+
+def _check_plane(name: str, plane: str, arr, entry: dict, level: str,
+                 corrupt: list) -> int:
+    a = np.asarray(jax.device_get(arr))
+    if list(a.shape) != entry["shape"]:
+        corrupt.append((name, plane,
+                        f"shape {list(a.shape)} != manifest {entry['shape']}"))
+        return 0
+    if str(a.dtype) != entry["dtype"]:
+        corrupt.append((name, plane,
+                        f"dtype {a.dtype} != manifest {entry['dtype']}"))
+        return 0
+    u8 = _u8_view(a)
+    if level == "full":
+        got, want, tag = _crc_full(u8), entry["crc32"], "crc32"
+    else:
+        got, want, tag = _crc_fast(u8), entry["crc32_fast"], "crc32_fast"
+    if got != want:
+        corrupt.append((name, plane,
+                        f"{tag} {got:#010x} != manifest {want:#010x}"))
+    return u8.size
+
+
+def verify_serve_state(state, *, level: str = "full") -> IntegrityReport:
+    """Re-hash a ServeState host-side against its pack-time manifest.
+
+    ``level``: 'off' (no-op ok report), 'fast' (sampled digests, bounded
+    time), 'full' (every byte — ground truth).  Every mismatching plane is
+    named ``(leaf, plane, reason)`` in ``report.corrupt``; the union of
+    leaves is ``report.quarantined``.
+    """
+    t0 = time.perf_counter()
+    if level == "off":
+        return IntegrityReport(level, True, [], 0, 0, 0.0)
+    if level not in ("fast", "full"):
+        raise ValueError(f"verify level {level!r} not in off|fast|full")
+    manifest = getattr(state, "manifest", None)
+    if not manifest:
+        raise ValueError("ServeState carries no integrity manifest "
+                         "(built with manifest=False?)")
+    corrupt: list = []
+    checked = 0
+    hashed = 0
+    seen = set()
+    for name, arr in _iter_plane_leaves(state.params):
+        seen.add(name)
+        entry = manifest["leaves"].get(name)
+        if entry is None:
+            corrupt.append((name, "-", "leaf absent from manifest"))
+            continue
+        hashed += _check_plane(name, _plane_tag(name), arr, entry, level,
+                               corrupt)
+        checked += 1
+    for name in manifest["leaves"]:
+        if name not in seen:
+            corrupt.append((name, "-", "manifest leaf missing from params"))
+    if manifest["lut"] is not None:
+        if state.lut is None:
+            corrupt.append(("<lut>", "lut", "LUT missing from state"))
+        else:
+            hashed += _check_plane("<lut>", "lut", state.lut,
+                                   manifest["lut"], level, corrupt)
+            checked += 1
+    if _table_crc(state.table) != manifest["table_crc32"]:
+        corrupt.append(("<table>", "table", "dictionary table crc mismatch"))
+    return IntegrityReport(level, not corrupt, corrupt, checked, hashed,
+                           time.perf_counter() - t0)
+
+
+def _plane_tag(name: str) -> str:
+    """Trailing attribute of a keyed path ('...w_gate.codes' -> 'codes')."""
+    return name.rsplit(".", 1)[-1] if "." in name else name
+
+
+# ---------------------------------------------------------------------------
+# Device-side structural invariants (jittable).
+# ---------------------------------------------------------------------------
+
+def _is_container(x) -> bool:
+    return isinstance(x, (PackedLinear, TiledPackedLinear, QuantLinear))
+
+
+def invariant_flags(params, lut) -> dict:
+    """Jittable: {leaf name -> bool scalar} structural health per container.
+
+    Packed planes: every code < LUT rows or == ESCAPE; 0 <= nlit <=
+    literal capacity; scale/zero finite.  QuantLinear: scale/zero finite.
+    Composable into a jitted program — no host sync here.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=_is_container)
+    out = {}
+    n_rows = lut.shape[0] if lut is not None else 0
+    for path, leaf in flat:
+        if not _is_container(leaf):
+            continue
+        name = jax.tree_util.keystr(path)
+        ok = jnp.all(jnp.isfinite(leaf.scale)) & \
+            jnp.all(jnp.isfinite(leaf.zero))
+        if isinstance(leaf, (PackedLinear, TiledPackedLinear)):
+            codes = leaf.codes.astype(jnp.uint32)
+            ok &= jnp.all((codes < n_rows) | (codes == ESCAPE))
+            cap = leaf.literals.shape[-2]
+            ok &= jnp.all((leaf.nlit >= 0) & (leaf.nlit <= cap))
+        out[name] = ok
+    return out
+
+
+def check_invariants(state) -> IntegrityReport:
+    """Host wrapper over :func:`invariant_flags` (one jitted evaluation).
+
+    Catches decode-crashing corruption (out-of-range LUT index, literal
+    overflow, non-finite affine) device-side before the first prefill;
+    in-range bit flips pass — pair with :func:`verify_serve_state`.
+    """
+    t0 = time.perf_counter()
+
+    names_holder = []
+
+    @jax.jit
+    def run(params, lut):
+        flags = invariant_flags(params, lut)
+        names_holder.append(list(flags))
+        return jnp.stack(list(flags.values())) if flags else jnp.zeros(
+            (0,), bool)
+
+    flags = np.asarray(run(state.params, state.lut))
+    names = names_holder[0] if names_holder else []
+    corrupt = [(n, "invariant", "device-side structural check failed")
+               for n, ok in zip(names, flags) if not ok]
+    return IntegrityReport("invariant", not corrupt, corrupt, len(names),
+                           0, time.perf_counter() - t0)

@@ -24,8 +24,12 @@ from . import dict_decode as _dd
 from . import flash_attention as _fa
 from . import fused_decode_matmul as _fdm
 
-# 'auto' | 'ref' | 'pallas' | 'pallas_interpret' — plus 'unfused' for
-# decode_dequant_matmul only (force the legacy two-step decode→matmul path).
+# 'auto' | 'ref' | 'pallas' | 'pallas_interpret' — plus, for the
+# compressed-matmul wrappers only, the degradation rungs 'unfused' (force
+# the legacy two-step decode→matmul path) and 'materialize' (decode +
+# dequantize the dense weight with the pure-jnp codec and plain einsum —
+# no Pallas kernel anywhere on the path; serve/resilience.py's last rung
+# before refusing).
 Impl = str
 
 # What 'auto' resolves to before the backend check.  CI's interpret-mode
@@ -42,11 +46,12 @@ def set_default_impl(impl: Impl) -> None:
 
 
 def _resolve_unfused(impl: Impl) -> Impl:
-    """'auto' resolves to 'unfused' when the session default says so — the
-    benchmark lever that forces the two-step baseline through call sites
-    (``generate``) that don't thread an ``impl`` argument."""
-    if impl == "auto" and _DEFAULT_IMPL == "unfused":
-        return "unfused"
+    """'auto' resolves to 'unfused'/'materialize' when the session default
+    says so — the lever that forces a degradation rung (or the benchmark
+    baseline) through call sites (``generate``) that don't thread an
+    ``impl`` argument."""
+    if impl == "auto" and _DEFAULT_IMPL in ("unfused", "materialize"):
+        return _DEFAULT_IMPL
     return impl
 
 
@@ -206,9 +211,16 @@ def decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
     axes, abstract meshes, prefill-scale row counts under a mesh
     (m > max(N, ``FUSED_SHARD_MAP_MAX_M``) — the shard_map's x
     replication would outweigh the dense round-trip; see the constant),
-    and ``impl='unfused'`` (the benchmark baseline).
+    and ``impl='unfused'`` (the benchmark baseline).  ``impl='materialize'``
+    (probe 'materialize') bypasses every Pallas kernel: pure-jnp decode +
+    dequantize to the dense weight, plain einsum — the resilience ladder's
+    last functional rung when both kernel paths are faulting.
     """
     impl = _resolve_unfused(impl)
+    if impl == "materialize":
+        DISPATCH_COUNTS["materialize"] += 1
+        w = packed.materialize(lut, dtype=x.dtype)
+        return jnp.einsum("...k,nk->...n", x, w).astype(out_dtype)
     unfused = impl == "unfused"
     inner_impl = "auto" if unfused else impl
     tile_n = getattr(packed, "tile_n", 0)
@@ -393,7 +405,9 @@ def tiled_decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
     """
     from repro.sharding.partition import constrain
     impl = _resolve_unfused(impl)
-    unfused = impl == "unfused"
+    # 'materialize' shares the dense-einsum fallback below (it already
+    # decodes with the pure-jnp codec) but gets its own probe key.
+    unfused = impl in ("unfused", "materialize")
     inner_impl = "auto" if unfused else impl
     tile_n = getattr(packed, "tile_n", 0)
     n, kdim = packed.shape
@@ -417,7 +431,8 @@ def tiled_decode_dequant_matmul(x, packed, lut, *, out_dtype=jnp.bfloat16,
             return _tiled_fused_sharded(x, packed, lut, out_dtype=out_dtype,
                                         impl=impl, mesh=mesh,
                                         axis_sizes=axis_sizes)
-    DISPATCH_COUNTS["tiled_unfused"] += 1
+    DISPATCH_COUNTS["tiled_materialize" if impl == "materialize"
+                    else "tiled_unfused"] += 1
     w = packed.materialize(lut, dtype=x.dtype)        # (n, kdim), in-sharded
     w = constrain(w, "model", ("pod", "data"))
     xs = constrain(x, *([None] * (x.ndim - 1)), ("pod", "data"))
@@ -532,7 +547,9 @@ def grouped_decode_dequant_matmul(xe, packed, lut, *,
     bytes).
     """
     impl = _resolve_unfused(impl)
-    unfused = impl == "unfused"
+    # 'materialize' is the same dense-stack einsum as 'unfused' here (the
+    # fallback already decodes pure-jnp), probed separately.
+    unfused = impl in ("unfused", "materialize")
     tile_n = getattr(packed, "tile_n", 0)
     e = xe.shape[0]
     if (not unfused and tile_n and lut is not None
@@ -548,7 +565,8 @@ def grouped_decode_dequant_matmul(xe, packed, lut, *,
             return _grouped_fused_sharded(xe, packed, lut,
                                           out_dtype=out_dtype, impl=impl,
                                           mesh=mesh)
-    DISPATCH_COUNTS["grouped_unfused"] += 1
+    DISPATCH_COUNTS["grouped_materialize" if impl == "materialize"
+                    else "grouped_unfused"] += 1
     assert lut is not None, \
         "grouped_decode_dequant_matmul: compressed stacks need the decode LUT"
     w = packed.materialize(lut, xe.dtype)             # (E, N, K) dense

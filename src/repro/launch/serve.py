@@ -24,11 +24,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import dataclasses
+
 from repro.configs import get_config
 from repro.core import CompressionPolicy
 from repro.kernels import ops
 from repro.models import lm as LM
 from repro.serve.engine import build_serve_params, make_serve_fns
+from repro.serve.resilience import ResiliencePolicy, ResilientEngine
 from repro.sharding import partition as PT
 from repro.train.data import DataConfig, DataPipeline
 
@@ -60,6 +63,13 @@ def main():
     ap.add_argument("--tiles", type=int, default=0,
                     help="2D-TP column tiles for compressed weights "
                          "(TiledPackedLinear; 0 = plain PackedLinear)")
+    ap.add_argument("--verify", default="off",
+                    choices=["off", "fast", "full"],
+                    help="integrity gate before serving: re-hash the "
+                         "packed artifact against its manifest (fast = "
+                         "sampled digests, full = every byte) plus the "
+                         "device-side invariant check; corrupt leaves "
+                         "refuse to serve (core/integrity.py)")
     args = ap.parse_args()
 
     mesh = _parse_mesh(args.mesh)
@@ -71,7 +81,7 @@ def main():
                                    batch=args.batch,
                                    seq_len=args.prompt_len))
     if args.mode == "dense":
-        sp, lut = params, None
+        st, sp, lut = None, params, None
     else:
         st = build_serve_params(
             params, CompressionPolicy(mode=args.mode, min_weight_size=1024,
@@ -88,6 +98,18 @@ def main():
             lut = jax.device_put(
                 lut, jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
         print(f"mesh: {dict(mesh.shape)}")
+
+    rengine = None
+    if st is not None:
+        # integrity gate (manifest re-hash + device invariants) runs at
+        # construction when --verify is on; corrupt leaves raise
+        # IntegrityError naming themselves instead of serving garbage.
+        rengine = ResilientEngine(
+            cfg, dataclasses.replace(st, params=sp, lut=lut),
+            policy=ResiliencePolicy(verify=args.verify), mesh=mesh)
+        if args.verify != "off":
+            print(rengine.verify_report.summary())
+            print(rengine.invariant_report.summary())
 
     toks = data.batch_at(0)["tokens"]
     b, t0 = toks.shape
@@ -113,6 +135,8 @@ def main():
           f"({b*(args.max_new-1)/dt:.1f} tok/s)")
     if args.mode == "compressed":
         print("matmul dispatch:", dict(ops.DISPATCH_COUNTS))
+    if rengine is not None:
+        print("health:", rengine.health())
     print("sample:", np.concatenate([np.asarray(o) for o in outs], 1)[0].tolist())
 
 

@@ -1,4 +1,8 @@
 """Serving runtime: compressed-weight prefill/decode (the paper's system)."""
 from .engine import ServeState, build_serve_params, make_serve_fns, generate
+from .resilience import (FALLBACK_COUNTS, DeadlineExceeded, ResiliencePolicy,
+                         ResilientEngine, ServeRefused)
 
-__all__ = ["ServeState", "build_serve_params", "make_serve_fns", "generate"]
+__all__ = ["ServeState", "build_serve_params", "make_serve_fns", "generate",
+           "ResilientEngine", "ResiliencePolicy", "FALLBACK_COUNTS",
+           "DeadlineExceeded", "ServeRefused"]

@@ -22,6 +22,21 @@ Pipeline (paper §2.3 "inference", adapted per DESIGN.md §2):
 
 Weight modes mirror the paper's evaluation triple:
   dense → "llama3.2-*", quant → "* Quantized", compressed → "* Compressed".
+
+Resilience (core/integrity.py + serve/resilience.py): ``build_serve_
+params`` also emits a per-plane integrity manifest (CRC32 over every
+codes/literals/nlit/scale/zero plane, the model-wide LUT and the table)
+stored on ``ServeState.manifest``.  The integrity invariant: when serving
+runs with verification on (``launch/serve --verify fast|full``, or a
+``ResiliencePolicy(verify=...)``), no compressed plane is decoded before
+``verify_serve_state`` has re-hashed it against that manifest and the
+device-side ``check_invariants`` pass (codes index inside the LUT, nlit
+within literal capacity, finite affines) has run — corrupted leaves are
+named and quarantined (``IntegrityError``), never silently decoded.
+Runtime faults degrade instead of dying: ``ResilientEngine`` retries a
+bounded number of times, then descends the ladder fused megakernel →
+``impl='unfused'`` two-step → ``impl='materialize'`` dense einsum →
+refuse-with-diagnostic, ticking ``resilience.FALLBACK_COUNTS`` per rung.
 """
 from __future__ import annotations
 
@@ -56,6 +71,9 @@ class ServeState:
     table: Optional[dict]
     mode: str
     stats: dict
+    # per-plane integrity manifest (core/integrity.py) recorded at pack
+    # time; verify_serve_state re-hashes against it before serving.
+    manifest: Optional[dict] = None
 
 
 def _iter_weight_paths(params):
@@ -68,7 +86,8 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
                        *, qcfg: QuantConfig | None = None,
                        table: dict | None = None,
                        block_weights: int | None = None,
-                       model_shards: int = 1) -> ServeState:
+                       model_shards: int = 1,
+                       manifest: bool = True) -> ServeState:
     """Host-side conversion dense → quant/compressed per policy.
 
     Stacked (scanned) leaves keep their leading layer/expert dims: each
@@ -85,6 +104,10 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
     TiledPackedLinear column tiles (2D-TP resident storage, §Perf D2),
     also tile-major — except expert stacks, which stay stacked
     PackedLinear (grouped-kernel eligible).
+
+    ``manifest=True`` (default) records the per-plane integrity manifest
+    (``core.integrity.build_manifest``) on the returned state so
+    ``verify_serve_state`` can prove the artifact unchanged at load/boot.
     """
     qcfg = qcfg or QuantConfig(bits=policy.bits, granularity="per_channel")
     bw = block_weights or policy.block_weights
@@ -226,8 +249,12 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
     if lut is not None:
         n_bytes["compressed"] += int(lut.nbytes)
     mode = policy.mode
+    mf = None
+    if manifest:
+        from repro.core import integrity
+        mf = integrity.build_manifest(params_out, lut, table)
     return ServeState(params=params_out, lut=lut, table=table, mode=mode,
-                      stats=n_bytes)
+                      stats=n_bytes, manifest=mf)
 
 
 # ---------------------------------------------------------------------------

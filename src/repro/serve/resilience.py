@@ -1,0 +1,246 @@
+"""Resilient serving — bounded retry, deadlines, and a degradation ladder.
+
+The serve stack's production posture (the inference-side mirror of
+``train/fault.py``): a request against a compressed model must never die
+on the first ``JaxRuntimeError`` or silently serve from a corrupt
+artifact.  ``ResilientEngine`` wraps ``engine.prefill``/``engine.generate``
+with:
+
+  * **Integrity gate** — per ``ResiliencePolicy.verify`` ('off'|'fast'|
+    'full'), the artifact is host-verified against its pack-time manifest
+    (``core.integrity.verify_serve_state``) and the cheap jittable
+    device-side invariant check (``check_invariants``) runs before the
+    first prefill.  Quarantined leaves abort serving with
+    ``IntegrityError`` naming them — no decode of unverified planes while
+    verification is on.
+  * **Bounded retry** — each ladder rung is attempted up to
+    ``max_retries + 1`` times on ``jax.errors.JaxRuntimeError`` (transient
+    device faults recover in place, exactly like the train loop's step
+    retry).
+  * **Degradation ladder** — persistent failures descend
+    ``fused`` (megakernel) → ``unfused`` (two-step decode→matmul) →
+    ``materialize`` (pure-jnp decode + dense einsum, no Pallas anywhere)
+    → refuse with ``ServeRefused`` carrying the per-rung diagnostics.
+    Each fallback ticks ``FALLBACK_COUNTS`` (alongside the existing
+    ``ops.DISPATCH_COUNTS`` / ``engine.TRACE_COUNTS`` probes) so CI and
+    the health snapshot can prove which rungs ran.  Rungs re-trace under a
+    suffixed config name — the jit caches key on (cfg, mesh), so a broken
+    fused trace is never reused by a fallback rung.
+  * **Per-request deadline** — ``deadline_s`` (policy or per-call) bounds
+    the whole retry/ladder walk; expiry raises ``DeadlineExceeded``
+    instead of burning the remaining rungs.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+
+from repro.core.integrity import (IntegrityError, check_invariants,
+                                  verify_serve_state)
+from repro.kernels import ops
+from repro.serve import engine as _engine
+
+# Degradation probe: rung/event -> count.  'unfused'/'materialize' tick
+# when the ladder *falls back* onto that rung; 'retry:<rung>' per bounded
+# in-rung retry; 'deadline' on expiry; 'refused' when the ladder is
+# exhausted; 'integrity_refused' when the verify gate quarantines the
+# artifact.  Reset between tests by the autouse conftest fixture.
+FALLBACK_COUNTS = collections.Counter()
+
+# Ladder rung -> the ops session impl that forces it.  'fused' serves with
+# the session default ('auto': megakernel dispatch); the fallbacks pin the
+# lever so every compressed matmul in the re-traced program takes the rung.
+_RUNG_IMPL = {"fused": None, "unfused": "unfused", "materialize": "materialize"}
+
+
+class DeadlineExceeded(TimeoutError):
+    """Per-request wall-clock budget expired mid retry/ladder walk."""
+
+
+class ServeRefused(RuntimeError):
+    """Every ladder rung failed; carries the per-rung diagnostics."""
+
+    def __init__(self, errors):
+        self.errors = list(errors)        # [(rung, attempt, repr(exc))]
+        super().__init__(
+            "degradation ladder exhausted: "
+            + "; ".join(f"{r}#{a}: {e}" for r, a, e in self.errors))
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencePolicy:
+    max_retries: int = 1                  # per rung, on JaxRuntimeError
+    deadline_s: float = 0.0               # 0 = no per-request deadline
+    ladder: tuple = ("fused", "unfused", "materialize")
+    verify: str = "off"                   # off | fast | full (boot gate)
+
+
+def _generate(params, cfg, tokens, **kw):
+    """Seam for fault injection/tests — resolves to ``engine.generate``."""
+    return _engine.generate(params, cfg, tokens, **kw)
+
+
+def _prefill(cfg, mesh, params, lut, batch, caches):
+    """Seam mirroring :func:`_generate` for the prefill path."""
+    prefill, _ = _engine.make_serve_fns(cfg, mesh=mesh)
+    return prefill(params, lut, batch, caches)
+
+
+class ResilientEngine:
+    """Fault-covered front door over (ServeState, cfg) serving.
+
+    ``state`` is an ``engine.ServeState`` (or any object with ``params``/
+    ``lut``/``manifest`` attributes).  The integrity gate runs once at
+    construction per ``policy.verify``; ``generate``/``prefill`` then walk
+    the retry/deadline/ladder machinery per request.
+    """
+
+    def __init__(self, cfg, state, *, policy: ResiliencePolicy | None = None,
+                 mesh=None):
+        self.cfg = cfg
+        self.state = state
+        self.mesh = mesh
+        self.policy = policy or ResiliencePolicy()
+        self.verify_report = None
+        self.invariant_report = None
+        self.requests = 0
+        self.last_rung: Optional[str] = None
+        self._history: list = []          # [(rung, attempt, repr(exc))]
+        if self.policy.verify != "off":
+            self._integrity_gate()
+
+    # -- integrity -----------------------------------------------------
+    def _integrity_gate(self):
+        """Host re-hash + device-side invariants before any decode."""
+        self.verify_report = verify_serve_state(self.state,
+                                                level=self.policy.verify)
+        if not self.verify_report.ok:
+            FALLBACK_COUNTS["integrity_refused"] += 1
+            raise IntegrityError(self.verify_report)
+        self.invariant_report = check_invariants(self.state)
+        if not self.invariant_report.ok:
+            FALLBACK_COUNTS["integrity_refused"] += 1
+            raise IntegrityError(self.invariant_report)
+
+    # -- rung plumbing -------------------------------------------------
+    def _rung_cfg(self, rung: str):
+        """Fallback rungs serve under a suffixed config name: the serve jit
+        caches key on (cfg, mesh), so the fallback re-traces with the
+        session impl lever pinned instead of reusing the faulty trace."""
+        if rung == self.policy.ladder[0]:
+            return self.cfg
+        return dataclasses.replace(self.cfg,
+                                   name=f"{self.cfg.name}+{rung}")
+
+    @staticmethod
+    def _effects_barrier():
+        """Surface host-callback/ordered-effect faults as JaxRuntimeError.
+
+        A failing host callback inside a jitted program parks its error on
+        the ordered-effects *token*, not (reliably) on the value outputs —
+        the custom-call thunks feeding Pallas kernels drop input error
+        events — and jax only awaits tokens at interpreter exit.  Draining
+        here turns that deferred crash into a catchable per-request fault;
+        the poisoned token is cleared so fallback rungs start clean."""
+        from jax._src import dispatch as _dispatch
+        try:
+            jax.effects_barrier()
+        except jax.errors.JaxRuntimeError:
+            _dispatch.runtime_tokens.clear()
+            raise
+
+    def _run_rung(self, rung: str, fn, *args, **kw):
+        lever = _RUNG_IMPL.get(rung)
+        prev = ops._DEFAULT_IMPL
+        try:
+            if lever is not None:
+                ops.set_default_impl(lever)
+            out = fn(*args, **kw)
+            jax.block_until_ready(out)    # surface faults inside the rung
+            self._effects_barrier()
+            return out
+        except jax.errors.JaxRuntimeError:
+            # The fault may be parked on BOTH the value outputs and the
+            # ordered-effects token; drain the token here so a stale
+            # poisoned one can't fail the next (healthy) rung.
+            try:
+                self._effects_barrier()
+            except jax.errors.JaxRuntimeError:
+                pass
+            raise
+        finally:
+            ops.set_default_impl(prev)
+
+    def _deadline_check(self, t0: float, deadline: float):
+        if deadline and time.monotonic() - t0 > deadline:
+            FALLBACK_COUNTS["deadline"] += 1
+            raise DeadlineExceeded(
+                f"request exceeded {deadline:.3f}s "
+                f"(elapsed {time.monotonic() - t0:.3f}s; "
+                f"history {self._history[-4:]})")
+
+    def _with_ladder(self, make_call, *, deadline_s: Optional[float]):
+        """Retry/ladder walk shared by generate and prefill.
+
+        ``make_call(rung)`` returns a zero-arg callable for that rung.
+        """
+        deadline = (self.policy.deadline_s if deadline_s is None
+                    else deadline_s)
+        t0 = time.monotonic()
+        errors = []
+        self.requests += 1
+        for i, rung in enumerate(self.policy.ladder):
+            if i > 0:
+                FALLBACK_COUNTS[rung] += 1
+            for attempt in range(self.policy.max_retries + 1):
+                self._deadline_check(t0, deadline)
+                if attempt > 0:
+                    FALLBACK_COUNTS[f"retry:{rung}"] += 1
+                try:
+                    out = self._run_rung(rung, make_call(rung))
+                    self.last_rung = rung
+                    return out
+                except jax.errors.JaxRuntimeError as e:
+                    rec = (rung, attempt, f"{type(e).__name__}: {e}"[:200])
+                    errors.append(rec)
+                    self._history.append(rec)
+        FALLBACK_COUNTS["refused"] += 1
+        raise ServeRefused(errors)
+
+    # -- public API ----------------------------------------------------
+    def generate(self, tokens, *, max_new: int = 16, temperature: float = 0.0,
+                 key=None, embeds=None, max_len: int | None = None,
+                 deadline_s: float | None = None):
+        def make_call(rung):
+            cfg = self._rung_cfg(rung)
+            return lambda: _generate(self.state.params, cfg, tokens,
+                                     lut=self.state.lut, max_new=max_new,
+                                     max_len=max_len,
+                                     temperature=temperature, key=key,
+                                     embeds=embeds, mesh=self.mesh)
+        return self._with_ladder(make_call, deadline_s=deadline_s)
+
+    def prefill(self, batch, caches, *, deadline_s: float | None = None):
+        def make_call(rung):
+            cfg = self._rung_cfg(rung)
+            return lambda: _prefill(cfg, self.mesh, self.state.params,
+                                    self.state.lut, batch, caches)
+        return self._with_ladder(make_call, deadline_s=deadline_s)
+
+    def health(self) -> dict:
+        """Snapshot for operators/CI: verify + probe counters + last rung."""
+        return {
+            "requests": self.requests,
+            "last_rung": self.last_rung,
+            "fallbacks": dict(FALLBACK_COUNTS),
+            "dispatch": dict(ops.DISPATCH_COUNTS),
+            "verify": (self.verify_report.summary()
+                       if self.verify_report else None),
+            "invariants": (self.invariant_report.summary()
+                           if self.invariant_report else None),
+            "recent_errors": self._history[-8:],
+        }

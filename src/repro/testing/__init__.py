@@ -1,0 +1,4 @@
+"""Test-support utilities importable by tests, benchmarks, and CI jobs."""
+from .faults import FaultInjector
+
+__all__ = ["FaultInjector"]

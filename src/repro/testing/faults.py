@@ -1,0 +1,200 @@
+"""Fault-injection harness — makes every resilience path provable in CI.
+
+Three fault families, mirroring what a flash-backed edge deployment
+actually sees:
+
+  * **Artifact corruption** — ``flip_bit`` / ``flip_lut_bit`` flip a
+    seeded bit inside a named plane (codes, literals, nlit, scale, zero)
+    or the model-wide LUT of a ``ServeState``; ``verify_serve_state``
+    must name the leaf.
+  * **Checkpoint damage** — ``uncommit_step`` removes the COMMIT marker
+    (torn write), ``truncate_step`` chops a shard file mid-byte,
+    ``corrupt_step`` flips payload bits post-commit (bit rot);
+    ``checkpoint.restore_latest`` must fall back to the previous
+    committed step.
+  * **Runtime errors** — ``failing(fn, times)`` wraps any callable to
+    raise ``jax.errors.JaxRuntimeError`` for its first N calls (the
+    transient-device-fault model, at the request seam);
+    ``decode_fault(nth)`` arms a *real in-graph* fault: an ordered
+    ``io_callback`` threaded into ``ops.decode_dequant_matmul`` raises on
+    the Nth kernel execution, so the error surfaces as a genuine
+    ``JaxRuntimeError`` from inside the jitted decode scan — exactly the
+    failure the ``ResilientEngine`` ladder exists for.  The injection
+    skips traces where the session impl lever pins a fallback rung
+    ('unfused'/'materialize'), modelling "the fused path is broken, the
+    fallback paths are not".
+
+Seeded via ``REPRO_FAULT_SEED`` (CI's fault-injection job varies it) so
+bit positions differ across runs without losing reproducibility.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import itertools
+import os
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _default_seed() -> int:
+    return int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+
+class FaultInjector:
+    def __init__(self, seed: Optional[int] = None):
+        self.rng = np.random.default_rng(
+            _default_seed() if seed is None else seed)
+
+    # -- artifact corruption -------------------------------------------
+    def _flip(self, arr, bit: Optional[int]) -> jax.Array:
+        a = np.asarray(jax.device_get(arr)).copy()
+        raw = a.reshape(-1).view(np.uint8)
+        if raw.size == 0:
+            raise ValueError("cannot flip a bit in an empty plane")
+        b = int(self.rng.integers(raw.size * 8)) if bit is None else bit
+        raw[b // 8] ^= np.uint8(1 << (b % 8))
+        return jnp.asarray(a)
+
+    def flip_bit(self, state, leaf_substr: str, plane: str = "codes",
+                 bit: Optional[int] = None):
+        """Return a copy of ``state`` with one bit flipped in the first
+        plane whose keyed path contains ``leaf_substr`` and ends in
+        ``plane`` ('codes'|'literals'|'nlit'|'scale'|'zero'|'codes_t'|…).
+        The manifest is deliberately NOT rebuilt — that is the point."""
+        flat, treedef = jax.tree_util.tree_flatten_with_path(state.params)
+        leaves = [leaf for _, leaf in flat]
+        target = None
+        for i, (path, leaf) in enumerate(flat):
+            name = jax.tree_util.keystr(path)
+            if leaf_substr in name and name.rsplit(".", 1)[-1] == plane:
+                target = (i, name)
+                break
+        if target is None:
+            raise KeyError(f"no leaf matching {leaf_substr!r} plane "
+                           f"{plane!r} in params")
+        i, name = target
+        leaves[i] = self._flip(leaves[i], bit)
+        new = dataclasses.replace(state,
+                                  params=treedef.unflatten(leaves))
+        return new, name
+
+    def flip_lut_bit(self, state, bit: Optional[int] = None):
+        """Flip one bit in the model-wide decode LUT."""
+        if state.lut is None:
+            raise ValueError("state has no LUT")
+        return dataclasses.replace(state, lut=self._flip(state.lut, bit))
+
+    # -- checkpoint damage ---------------------------------------------
+    @staticmethod
+    def _step_dir(ckpt_dir: str, step: int) -> str:
+        return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+    def uncommit_step(self, ckpt_dir: str, step: int):
+        """Torn write: the COMMIT marker never landed."""
+        os.remove(os.path.join(self._step_dir(ckpt_dir, step), "COMMIT"))
+
+    def truncate_step(self, ckpt_dir: str, step: int, keep_bytes: int = 64):
+        """Chop every shard file to ``keep_bytes`` (unreadable archive)."""
+        d = self._step_dir(ckpt_dir, step)
+        for fn in os.listdir(d):
+            if fn.startswith("shard_"):
+                path = os.path.join(d, fn)
+                with open(path, "r+b") as f:
+                    f.truncate(keep_bytes)
+
+    def corrupt_step(self, ckpt_dir: str, step: int, nbits: int = 8):
+        """Post-commit bit rot inside the shard payload (readable archive,
+        wrong bytes — only checksums catch this)."""
+        d = self._step_dir(ckpt_dir, step)
+        for fn in sorted(os.listdir(d)):
+            if fn.startswith("shard_"):
+                path = os.path.join(d, fn)
+                data = bytearray(open(path, "rb").read())
+                # flip bits in the back half: past the zip directory-ish
+                # header region, inside the stored arrays
+                lo = len(data) // 2
+                for _ in range(nbits):
+                    b = int(self.rng.integers(lo * 8, len(data) * 8))
+                    data[b // 8] ^= 1 << (b % 8)
+                open(path, "wb").write(bytes(data))
+                return
+
+    # -- runtime errors ------------------------------------------------
+    def failing(self, fn: Callable, times: int = 1,
+                message: str = "injected device fault") -> Callable:
+        """Wrap ``fn`` to raise ``JaxRuntimeError`` on its first ``times``
+        calls, then delegate — the transient-fault model at a call seam."""
+        counter = itertools.count()
+
+        def wrapped(*args: Any, **kw: Any):
+            if next(counter) < times:
+                raise jax.errors.JaxRuntimeError(message)
+            return fn(*args, **kw)
+
+        return wrapped
+
+    @contextlib.contextmanager
+    def decode_fault(self, nth: int = 1, times: int = 1 << 30,
+                     message: str = "injected decode fault"):
+        """Arm a real in-graph fault on the Nth compressed-matmul execution.
+
+        Patches ``ops.decode_dequant_matmul`` with a wrapper that threads
+        an ordered ``io_callback`` tick into the graph; the host counter
+        raises for executions [nth, nth + times), which surfaces as a
+        ``JaxRuntimeError`` out of the jitted program (including from
+        inside the decode ``lax.scan``).  Traces made while the session
+        impl lever pins 'unfused'/'materialize' are left clean, so the
+        degradation ladder's fallback rungs recover.  NOTES: (1) callers
+        must trace under a fresh config name — already-cached jits don't
+        carry the injected callback; (2) this models a *persistent* fused-
+        kernel fault: the error lives on the ordered-effects token, and a
+        later healthy program overwrites that token, so a fault that stops
+        firing mid-request can be masked — model *transient* faults with
+        :meth:`failing` at the request seam instead.
+        """
+        from repro.kernels import ops
+
+        orig = ops.decode_dequant_matmul
+        count = itertools.count(1)
+
+        def host_tick():
+            n = next(count)
+            if nth <= n < nth + times:
+                raise RuntimeError(f"{message} (execution {n})")
+            return np.int32(0)
+
+        def wrapped(x, packed, lut, **kw):
+            if ops._DEFAULT_IMPL in ("unfused", "materialize"):
+                return orig(x, packed, lut, **kw)
+            tick = jax.experimental.io_callback(
+                host_tick, jax.ShapeDtypeStruct((), jnp.int32), ordered=True)
+            # Real (non-foldable) data dependency on the callback *result*
+            # buffer: the tick is always 0, but XLA can't prove it, so the
+            # activations inherit the callback's definition event — when
+            # host_tick raises, the poisoned event propagates to the rung's
+            # outputs and block_until_ready raises JaxRuntimeError.  (A
+            # ``tick * 0`` dependency gets constant-folded away; the error
+            # then lives only on the ordered-effects token, which is not
+            # awaited until interpreter exit.)
+            x = x + jnp.minimum(tick, 0).astype(x.dtype)
+            return orig(x, packed, lut, **kw)
+
+        ops.decode_dequant_matmul = wrapped
+        try:
+            yield
+        finally:
+            ops.decode_dequant_matmul = orig
+            # Drain the poisoned ordered-effects token: the injected raise
+            # also fails the token buffer, and jax awaits those at atexit —
+            # an undrained one would crash the *interpreter exit* of an
+            # otherwise-green test run.
+            from jax._src import dispatch as _dispatch
+            try:
+                _dispatch.runtime_tokens.block_until_ready()
+            except Exception:
+                pass
+            _dispatch.runtime_tokens.clear()

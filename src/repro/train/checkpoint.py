@@ -15,6 +15,13 @@ same code paths):
     the *target* mesh's NamedSharding — restoring a (16,16) checkpoint
     onto (8,16) or (2,16,16) "elastic" meshes is the same call.
   * step-indexed data pipeline (data.py) makes restarts bit-deterministic.
+  * integrity: the manifest records a per-leaf CRC32 alongside shapes and
+    dtypes; ``restore`` validates all three against both the manifest and
+    the target structure *before* unflattening (a flash-rotted or torn
+    shard raises ``CheckpointCorruptError`` naming the leaf instead of
+    silently loading garbage), and ``restore_latest`` walks back to the
+    previous COMMIT-marked step when the newest one is unreadable or
+    corrupt.
 """
 from __future__ import annotations
 
@@ -22,12 +29,23 @@ import json
 import os
 import shutil
 import tempfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
 COMMIT = "COMMIT"
+
+
+class CheckpointCorruptError(ValueError):
+    """A committed checkpoint failed shape/dtype/checksum validation."""
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    a = np.ascontiguousarray(arr)
+    raw = a.reshape(-1).view(np.uint8) if a.size else np.zeros(0, np.uint8)
+    return zlib.crc32(raw) & 0xFFFFFFFF
 
 
 def _flatten_with_names(tree: Any):
@@ -56,6 +74,7 @@ def save(ckpt_dir: str, step: int, tree: Any, *, host_id: int = 0,
             "names": names,
             "shapes": [list(a.shape) for a in arrs.values()],
             "dtypes": [str(a.dtype) for a in arrs.values()],
+            "crc32": [_leaf_crc(a) for a in arrs.values()],
             "hosts": 1,
             "extra": extra or {},
         }
@@ -85,37 +104,117 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def _load_manifest(step_dir: str) -> dict:
+    try:
+        with open(os.path.join(step_dir, "manifest.json")) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"unreadable manifest in {step_dir}: "
+                                     f"{e}") from e
+
+
+def _validate_manifest(manifest: dict, names, leaves, step_dir: str):
+    """Per-leaf shape/dtype validation against the *target* structure —
+    never trust the manifest (or the shards) blindly before unflattening."""
+    m_names = manifest.get("names", [])
+    m_shapes = {n: tuple(s) for n, s in zip(m_names,
+                                            manifest.get("shapes", []))}
+    for name, leaf in zip(names, leaves):
+        if name not in m_shapes:
+            raise CheckpointCorruptError(
+                f"{step_dir}: manifest missing leaf {name}")
+        if m_shapes[name] != tuple(leaf.shape):
+            raise CheckpointCorruptError(
+                f"{name}: ckpt {m_shapes[name]} vs model "
+                f"{tuple(leaf.shape)}")
+
+
 def restore(ckpt_dir: str, step: int, like: Any, *,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, verify: bool = True) -> Any:
     """Load a checkpoint into the structure of ``like``.
 
     ``shardings``: optional matching tree of NamedSharding for the *target*
-    mesh (elastic restore); plain device_put otherwise.
+    mesh (elastic restore); plain device_put otherwise.  ``verify=True``
+    checks every leaf's shape/dtype against the manifest and target
+    structure and, for checkpoints that carry them, the per-leaf CRC32
+    checksums — raising ``CheckpointCorruptError`` (naming the leaf)
+    *before* any state is unflattened.
     """
     step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
     if not os.path.exists(os.path.join(step_dir, COMMIT)):
         raise FileNotFoundError(f"no committed checkpoint at {step_dir}")
     names, leaves, treedef = _flatten_with_names(like)
+    manifest = _load_manifest(step_dir)
+    if verify:
+        _validate_manifest(manifest, names, leaves, step_dir)
+    crcs = dict(zip(manifest.get("names", []), manifest.get("crc32", [])))
+    m_dtypes = dict(zip(manifest.get("names", []),
+                        manifest.get("dtypes", [])))
     data = {}
-    for fn in sorted(os.listdir(step_dir)):
-        if fn.startswith("shard_") and fn.endswith(".npz"):
-            with np.load(os.path.join(step_dir, fn)) as z:
-                for k in z.files:
-                    data[k] = z[k]
+    try:
+        for fn in sorted(os.listdir(step_dir)):
+            if fn.startswith("shard_") and fn.endswith(".npz"):
+                with np.load(os.path.join(step_dir, fn)) as z:
+                    for k in z.files:
+                        data[k] = z[k]
+    except Exception as e:   # truncated/garbled archive (zipfile/np errors)
+        raise CheckpointCorruptError(
+            f"unreadable shard in {step_dir}: {e}") from e
     out = []
     shard_leaves = (jax.tree_util.tree_leaves(
         shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
         if shardings is not None else [None] * len(names))
-    for name, leaf, shd in zip(names, leaves, shard_leaves):
+    # validate every leaf first; only then device_put/unflatten
+    arrs = []
+    for name, leaf in zip(names, leaves):
         if name not in data:
-            raise KeyError(f"checkpoint missing leaf {name}")
+            raise CheckpointCorruptError(f"checkpoint missing leaf {name}")
         arr = data[name]
         if tuple(arr.shape) != tuple(leaf.shape):
-            raise ValueError(f"{name}: ckpt {arr.shape} vs model {leaf.shape}")
-        arr = arr.astype(leaf.dtype)
+            raise CheckpointCorruptError(
+                f"{name}: ckpt {arr.shape} vs model {tuple(leaf.shape)}")
+        if verify and m_dtypes.get(name, str(arr.dtype)) != str(arr.dtype):
+            raise CheckpointCorruptError(
+                f"{name}: shard dtype {arr.dtype} vs manifest "
+                f"{m_dtypes[name]}")
+        if verify and name in crcs and _leaf_crc(arr) != crcs[name]:
+            raise CheckpointCorruptError(
+                f"{name}: checksum mismatch (bit rot or torn shard)")
+        arrs.append(arr.astype(leaf.dtype))
+    for arr, shd in zip(arrs, shard_leaves):
         out.append(jax.device_put(arr, shd) if shd is not None
                    else jax.device_put(arr))
     return treedef.unflatten(out)
+
+
+def restore_latest(ckpt_dir: str, like: Any, *, shardings: Any = None,
+                   on_skip=None):
+    """Restore the newest *loadable* committed checkpoint.
+
+    Walks committed steps newest → oldest; a step that fails validation
+    (unreadable shard, checksum/shape mismatch) is skipped — flash bit rot
+    on the newest step must not strand a host that still has an older
+    good one — and ``on_skip(step, exc)`` is notified.  Returns
+    ``(state, step)``; raises FileNotFoundError when no step loads.
+    """
+    if not os.path.isdir(ckpt_dir):
+        raise FileNotFoundError(f"no checkpoint dir {ckpt_dir}")
+    steps = sorted(
+        (int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+         if d.startswith("step_") and
+         os.path.exists(os.path.join(ckpt_dir, d, COMMIT))),
+        reverse=True)
+    last_exc = None
+    for s in steps:
+        try:
+            return restore(ckpt_dir, s, like, shardings=shardings), s
+        except (CheckpointCorruptError, KeyError, OSError) as e:
+            last_exc = e
+            if on_skip is not None:
+                on_skip(s, e)
+    raise FileNotFoundError(
+        f"no loadable committed checkpoint under {ckpt_dir}"
+        + (f" (last error: {last_exc})" if last_exc else ""))
 
 
 def prune_old(ckpt_dir: str, keep: int = 3) -> None:

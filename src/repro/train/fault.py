@@ -44,18 +44,35 @@ class FaultConfig:
 
 class PreemptionGuard:
     """Flags SIGTERM/SIGINT so the loop checkpoints before exiting —
-    the on-prem analogue of a TPU maintenance-event hook."""
+    the on-prem analogue of a TPU maintenance-event hook.
+
+    Both signals are registered (SIGTERM = scheduler preemption, SIGINT =
+    operator ^C); ``restore()`` reinstates the previous handlers so guards
+    can be scoped (tests, nested launchers)."""
+
+    SIGNALS = (signal.SIGTERM, signal.SIGINT)
 
     def __init__(self, enable: bool = True):
         self.fired = False
+        self._prev = {}
         if enable:
-            try:
-                signal.signal(signal.SIGTERM, self._handler)
-            except ValueError:
-                pass  # non-main thread (tests)
+            for sig in self.SIGNALS:
+                try:
+                    self._prev[sig] = signal.signal(sig, self._handler)
+                except ValueError:
+                    pass  # non-main thread (tests)
 
     def _handler(self, signum, frame):
         self.fired = True
+
+    def restore(self):
+        """Reinstate the handlers that were active before this guard."""
+        for sig, prev in self._prev.items():
+            try:
+                signal.signal(sig, prev)
+            except ValueError:
+                pass
+        self._prev = {}
 
 
 class FaultTolerantLoop:
@@ -72,12 +89,18 @@ class FaultTolerantLoop:
         self.start_step = 0
 
     def maybe_resume(self) -> int:
-        """Restore the latest committed checkpoint if one exists."""
-        last = ckpt.latest_step(self.fcfg.ckpt_dir)
-        if last is not None:
-            self.state = ckpt.restore(self.fcfg.ckpt_dir, last, self.state,
-                                      shardings=self.state_shardings)
+        """Restore the newest *loadable* committed checkpoint if one exists.
+
+        A corrupt/unreadable newest step (flash bit rot, torn shard) falls
+        back to the previous COMMIT-marked step instead of raising — the
+        restart must come up on whatever good state survives."""
+        try:
+            self.state, last = ckpt.restore_latest(
+                self.fcfg.ckpt_dir, self.state,
+                shardings=self.state_shardings)
             self.start_step = last
+        except FileNotFoundError:
+            pass  # no checkpoint (or none loadable): cold start from 0
         return self.start_step
 
     def _checkpoint(self, step: int):

@@ -123,3 +123,53 @@ def test_fault_loop_straggler_flag(tmp_path):
                              on_metrics=lambda s, m: seen.append(m))
     loop.run(2)
     assert any(m.get("straggler") for m in seen)
+
+
+def test_preemption_guard_flags_sigterm_and_sigint():
+    """Both preemption signals (scheduler SIGTERM, operator SIGINT) set the
+    flag without killing the process; restore() reinstates the previous
+    handlers so scoped guards don't leak."""
+    import signal
+    from repro.train.fault import PreemptionGuard
+
+    before = {s: signal.getsignal(s) for s in PreemptionGuard.SIGNALS}
+    guard = PreemptionGuard()
+    try:
+        assert not guard.fired
+        signal.raise_signal(signal.SIGTERM)
+        assert guard.fired
+        guard.fired = False
+        signal.raise_signal(signal.SIGINT)   # no KeyboardInterrupt raised
+        assert guard.fired
+    finally:
+        guard.restore()
+    for s in PreemptionGuard.SIGNALS:
+        assert signal.getsignal(s) is before[s]
+
+
+def test_preemption_guard_triggers_checkpoint(tmp_path):
+    """A signal mid-run makes the loop commit and stop at the next step
+    boundary — the resume then picks up from that commit."""
+    import signal
+    cfg, tcfg, state = _state()
+    data = DataPipeline(DataConfig(vocab_size=cfg.vocab_size, batch=2,
+                                   seq_len=8))
+    step = jax.jit(make_train_step(cfg, tcfg))
+    d = str(tmp_path / "ck")
+    fcfg = FaultConfig(ckpt_dir=d, ckpt_every=100)
+    loop = FaultTolerantLoop(step, state, data, fcfg)
+
+    fired_at = []
+
+    def on_metrics(s, m):
+        if s == 2 and not fired_at:
+            fired_at.append(s)
+            signal.raise_signal(signal.SIGINT)
+
+    loop.on_metrics = on_metrics
+    try:
+        loop.run(10)
+    finally:
+        loop.guard.restore()
+    assert fired_at == [2]
+    assert ckpt.latest_step(d) == 2          # stopped + committed early
