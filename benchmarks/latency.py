@@ -29,6 +29,7 @@ from repro.core.compressed import (pack_expert_stack, pack_linear,
 from repro.core.policy import CompressionPolicy
 from repro.kernels import ops
 from repro.kernels.fused_decode_matmul import DEFAULT_BM
+from repro.serve.context import ServeContext
 from repro.serve.engine import build_serve_params, generate
 
 from .common import emit, time_call, trained_tiny_model, \
@@ -46,7 +47,8 @@ def serving_latency():
         modes[mode] = (st.params, st.lut)
 
     for mode, (p, lut) in modes.items():
-        t = time_call(lambda p=p, lut=lut: generate(p, cfg, toks, lut=lut,
+        ctx = ServeContext(cfg=cfg, lut=lut)
+        t = time_call(lambda p=p, ctx=ctx: generate(p, cfg, toks, ctx=ctx,
                                                     max_new=8),
                       warmup=1, iters=3)
         emit(f"latency.generate8.{mode}_s", f"{t:.4f}",

@@ -31,6 +31,7 @@ from repro.core.integrity import (build_manifest, check_invariants,
                                   verify_serve_state)
 from repro.core.policy import CompressionPolicy
 from repro.kernels import ops
+from repro.serve.context import ServeContext
 from repro.serve.engine import build_serve_params, generate
 from repro.serve.resilience import ResiliencePolicy
 
@@ -111,14 +112,15 @@ def ladder_generate(rows: list | None = None):
             if rung != _LADDER[0]:
                 ops.set_default_impl(rung)
             ops.DISPATCH_COUNTS.clear()
+            ctx = ServeContext.from_state(cfg_v, st)
             # warmup (trace) + 3 timed calls
             jax.block_until_ready(generate(st.params, cfg_v, toks,
-                                           lut=st.lut, max_new=max_new))
+                                           ctx=ctx, max_new=max_new))
             ts = []
             for _ in range(3):
                 t0 = time.perf_counter()
                 jax.block_until_ready(generate(st.params, cfg_v, toks,
-                                               lut=st.lut, max_new=max_new))
+                                               ctx=ctx, max_new=max_new))
                 ts.append(time.perf_counter() - t0)
             t = sorted(ts)[len(ts) // 2]
             disp = dict(ops.DISPATCH_COUNTS)

@@ -1,0 +1,142 @@
+"""Mixed-traffic serving benchmark — the continuous-batching engine
+under a seeded request trace.
+
+One ``serve.Engine`` over a small paged-KV slot pool serves a trace of
+overlapping requests with staggered Poisson arrivals and varied
+prompt/decode lengths — the workload the fixed-batch ``generate`` cannot
+express.  Measured per trace:
+
+  * tokens/s over the whole drain (wall clock);
+  * per-request latency (submit→finish) p50/p95, in engine steps and
+    seconds;
+  * slot occupancy mean/max + how many requests joined mid-decode —
+    occupancy_max > 1 with joined_mid_decode >= 1 is the continuous-
+    batching acceptance bar (requests actually overlap);
+  * ``parity_ok`` — every served output is bitwise-equal to a one-shot
+    ``generate`` of the same prompt at the pool's cache length (the
+    correctness bar; asserted, not just reported).
+
+``serving_json`` bundles it into ``BENCH_serving.json`` for the CI
+artifact trail (see the serving-smoke job).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.core.policy import CompressionPolicy
+from repro.serve.context import ServeContext
+from repro.serve.engine import build_serve_params, generate
+from repro.serve.scheduler import Engine, Request
+
+from .common import emit, trained_tiny_model
+
+
+def serve_trace(rows: list | None = None, *, arch: str = "llama3.2-1b",
+                n_requests: int = 8, n_slots: int = 3, seed: int = 0):
+    """Serve one seeded mixed-traffic trace; returns the summary dict."""
+    cfg, params, _ = trained_tiny_model(arch, steps=20, seed=seed)
+    st = build_serve_params(params, CompressionPolicy(
+        mode="compressed", min_weight_size=1024))
+    ctx = ServeContext.from_state(cfg, st)
+
+    rng = np.random.RandomState(seed)
+    prompt_lens = rng.randint(4, 12, n_requests)
+    max_news = rng.randint(3, 9, n_requests)
+    arrivals = np.concatenate([[0], np.cumsum(rng.poisson(1.5, n_requests - 1))])
+    prompts = [rng.randint(0, cfg.vocab_size, p).astype(np.int32)
+               for p in prompt_lens]
+    max_len = int(prompt_lens.max() + max_news.max())
+
+    eng = Engine(ctx, st.params, n_slots=n_slots, max_len=max_len)
+    # warm the traces so the timed drain measures steady-state serving
+    eng.submit(Request(tokens=prompts[0], max_new=2, rid=-1))
+    eng.drain()
+    eng.steps = 0
+    eng.completions.clear()
+    eng.stats = {"admitted": 0, "joined_mid_decode": 0, "occupancy": []}
+
+    submit_wall = {}
+    t0 = time.perf_counter()
+    submitted = 0
+    while submitted < n_requests or eng.health()["occupied"] \
+            or eng.health()["queued"]:
+        while submitted < n_requests and eng.steps >= arrivals[submitted]:
+            eng.submit(Request(tokens=prompts[submitted],
+                               max_new=int(max_news[submitted]),
+                               rid=submitted))
+            submit_wall[submitted] = time.perf_counter()
+            submitted += 1
+        eng.step()
+    jax.block_until_ready(eng.pool.pages)
+    wall = time.perf_counter() - t0
+
+    by_rid = {c.rid: c for c in eng.completions}
+    lat_steps, lat_s, parity_ok = [], [], True
+    for i in range(n_requests):
+        c = by_rid[i]
+        lat_steps.append(c.finished_step - c.submitted_step + 1)
+        # finish wall time ~ proportional share of the drain; per-request
+        # wall is measured from submit to the step that completed it
+        lat_s.append(wall * lat_steps[-1] / max(eng.steps, 1))
+        ref = np.asarray(generate(st.params, cfg, prompts[i][None, :],
+                                  ctx=ctx, max_new=int(max_news[i]),
+                                  max_len=eng.pool.max_len))[0]
+        parity_ok &= bool(np.array_equal(ref, c.tokens))
+
+    h = eng.health()
+    n_tok = sum(by_rid[i].n_generated for i in range(n_requests))
+    summary = dict(
+        bench="serve_trace", arch=arch, n_requests=n_requests,
+        n_slots=n_slots, seed=seed, steps=h["steps"], wall_s=wall,
+        tokens=n_tok, tokens_per_s=n_tok / wall,
+        latency_p50_steps=float(np.percentile(lat_steps, 50)),
+        latency_p95_steps=float(np.percentile(lat_steps, 95)),
+        latency_p50_s=float(np.percentile(lat_s, 50)),
+        latency_p95_s=float(np.percentile(lat_s, 95)),
+        occupancy_mean=h["occupancy_mean"],
+        occupancy_max=h["occupancy_max"],
+        joined_mid_decode=h["joined_mid_decode"],
+        parity_ok=parity_ok)
+    # the continuous-batching acceptance bar
+    assert summary["parity_ok"], "engine output diverged from generate"
+    assert summary["occupancy_max"] > 1, "requests never overlapped"
+    assert summary["joined_mid_decode"] >= 1, "no mid-decode admission"
+    emit("serving.tokens_per_s", f"{summary['tokens_per_s']:.1f}",
+         f"{n_requests} reqs, {n_slots} slots, occ_max="
+         f"{summary['occupancy_max']}")
+    emit("serving.latency_p50_steps", f"{summary['latency_p50_steps']:.1f}",
+         f"p95={summary['latency_p95_steps']:.1f}")
+    emit("serving.joined_mid_decode", str(summary["joined_mid_decode"]),
+         f"parity_ok={parity_ok}")
+    if rows is not None:
+        rows.append(summary)
+    return summary
+
+
+def serving_json(path: str = "BENCH_serving.json", *,
+                 arch: str = "llama3.2-1b", n_requests: int = 8,
+                 n_slots: int = 3, seed: int = 0):
+    """Machine-readable mixed-traffic serving artifact."""
+    rows: list = []
+    serve_trace(rows, arch=arch, n_requests=n_requests, n_slots=n_slots,
+                seed=seed)
+    payload = {"schema": 1, "bench": "serving",
+               "backend": jax.default_backend(),
+               "host_devices": jax.device_count(),
+               "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit("serving.json_rows", str(len(rows)), path)
+    return payload
+
+
+def main():
+    serving_json()
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import CompressionPolicy
 from repro.models import lm as LM
+from repro.serve.context import ServeContext
 from repro.serve.engine import build_serve_params, generate
 from repro.train.data import DataConfig, DataPipeline
 from repro.train.optimizer import AdamWConfig
@@ -49,12 +50,14 @@ def main():
 
     # 3. Serve from the compressed weights (decompress-on-demand in-graph).
     prompt = jnp.asarray(np.asarray(data.batch_at(999)["tokens"])[:2, :16])
-    out_c = generate(st.params, cfg, prompt, lut=st.lut, max_new=12)
+    out_c = generate(st.params, cfg, prompt,
+                     ctx=ServeContext.from_state(cfg, st), max_new=12)
 
     # 4. Losslessness check: compressed == quantized, token for token.
     sq = build_serve_params(params, CompressionPolicy(mode="quant",
                                                       min_weight_size=1024))
-    out_q = generate(sq.params, cfg, prompt, lut=sq.lut, max_new=12)
+    out_q = generate(sq.params, cfg, prompt,
+                     ctx=ServeContext.from_state(cfg, sq), max_new=12)
     exact = bool((np.asarray(out_c) == np.asarray(out_q)).all())
     print(f"compressed generation: {np.asarray(out_c)[0, -12:].tolist()}")
     print(f"matches quantized model exactly: {exact}")

@@ -9,8 +9,8 @@
 Use via ``repro.kernels.ops`` which handles padding + backend dispatch.
 """
 from . import ops, ref
-from .ops import (dequant_matmul, dict_decode, flash_attention,
-                  decode_dequant_matmul)
+from .ops import (DEFAULT_LADDER, FUSED_RUNG, Impl, dequant_matmul,
+                  dict_decode, flash_attention, decode_dequant_matmul)
 
 __all__ = ["ops", "ref", "dequant_matmul", "dict_decode", "flash_attention",
-           "decode_dequant_matmul"]
+           "decode_dequant_matmul", "Impl", "FUSED_RUNG", "DEFAULT_LADDER"]

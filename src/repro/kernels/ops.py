@@ -12,6 +12,7 @@ about block alignment.
 from __future__ import annotations
 
 import collections
+import enum
 import functools
 import os
 
@@ -24,25 +25,58 @@ from . import dict_decode as _dd
 from . import flash_attention as _fa
 from . import fused_decode_matmul as _fdm
 
-# 'auto' | 'ref' | 'pallas' | 'pallas_interpret' — plus, for the
-# compressed-matmul wrappers only, the degradation rungs 'unfused' (force
-# the legacy two-step decode→matmul path) and 'materialize' (decode +
-# dequantize the dense weight with the pure-jnp codec and plain einsum —
-# no Pallas kernel anywhere on the path; serve/resilience.py's last rung
-# before refusing).
-Impl = str
+
+class Impl(str, enum.Enum):
+    """The single source of truth for kernel-dispatch impl values.
+
+    Backend selectors: ``AUTO`` (backend default — kernel on TPU, jnp
+    oracle elsewhere), ``REF`` (force the oracle), ``PALLAS`` (force the
+    compiled kernel), ``PALLAS_INTERPRET`` (kernel bodies in interpret
+    mode — CI's CPU kernel job).  Degradation rungs, for the
+    compressed-matmul wrappers only: ``UNFUSED`` (legacy two-step
+    decode→matmul path) and ``MATERIALIZE`` (pure-jnp decode + dense
+    einsum, no Pallas anywhere — serve/resilience.py's last functional
+    rung).
+
+    A ``str`` subclass, so every existing ``impl='unfused'`` call site —
+    and jit static-argnum hashing — keeps working; dispatch code compares
+    against these members instead of scattered string literals.
+    """
+    AUTO = "auto"
+    REF = "ref"
+    PALLAS = "pallas"
+    PALLAS_INTERPRET = "pallas_interpret"
+    UNFUSED = "unfused"
+    MATERIALIZE = "materialize"
+
+    __str__ = str.__str__          # f"{Impl.UNFUSED}" -> "unfused"
+
+
+VALID_IMPLS = frozenset(i.value for i in Impl)
+
+# The resilience ladder's rung names, from the same source of truth the
+# dispatch lever uses.  'fused' is not an impl — it serves with the
+# session default ('auto' → megakernel dispatch); the fallback rungs pin
+# the corresponding Impl lever (serve/resilience.py::_RUNG_IMPL).
+FUSED_RUNG = "fused"
+DEFAULT_LADDER = (FUSED_RUNG, Impl.UNFUSED.value, Impl.MATERIALIZE.value)
 
 # What 'auto' resolves to before the backend check.  CI's interpret-mode
 # kernel job sets REPRO_TEST_IMPL=pallas_interpret (via tests/conftest.py)
 # so every auto-dispatched call exercises the Pallas kernel bodies on the
-# CPU runner instead of the jnp oracles.
+# CPU runner instead of the jnp oracles.  Lenient at import (a bad env
+# var falls back to 'auto' instead of breaking every import);
+# ``set_default_impl`` is the strict entry point.
 _DEFAULT_IMPL = os.environ.get("REPRO_TEST_IMPL", "auto")
+if _DEFAULT_IMPL not in VALID_IMPLS:
+    _DEFAULT_IMPL = "auto"
 
 
-def set_default_impl(impl: Impl) -> None:
-    """Override what ``impl='auto'`` resolves to (tests/CI)."""
+def set_default_impl(impl) -> None:
+    """Override what ``impl='auto'`` resolves to (tests/CI, the resilience
+    ladder's fallback lever).  Validates against :class:`Impl`."""
     global _DEFAULT_IMPL
-    _DEFAULT_IMPL = impl
+    _DEFAULT_IMPL = Impl(impl).value
 
 
 def _resolve_unfused(impl: Impl) -> Impl:

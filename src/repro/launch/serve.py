@@ -1,10 +1,16 @@
-"""Serving launcher — compress a model and serve batched requests.
+"""Serving launcher — compress a model and serve a request trace.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --mode compressed --batch 4 --max-new 16
+        --mode compressed --batch 8 --slots 3 --stagger 2 --max-new 16
 
-Host-mesh driver over the same (prefill, decode) step functions the
-multi-pod dry-run lowers for the production meshes.
+Drives the request-level API: each of ``--batch`` prompts is submitted as
+a ``serve.Request`` with staggered arrivals (``--stagger`` engine steps
+apart), served by the continuous-batching ``serve.Engine`` over a paged
+KV pool of ``--slots`` decode slots — requests join and leave the running
+decode loop per tick, and the occupancy/throughput summary printed at the
+end shows the overlap.  With compression on, the engine comes from
+``ResilientEngine.scheduler()``: every jitted prefill/decode step walks
+the retry/degradation ladder and the health snapshot is printed.
 
 Sharded serving (``--mesh DATA,MODEL``, e.g. with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 2,4``):
@@ -30,8 +36,10 @@ from repro.configs import get_config
 from repro.core import CompressionPolicy
 from repro.kernels import ops
 from repro.models import lm as LM
-from repro.serve.engine import build_serve_params, make_serve_fns
+from repro.serve.context import ServeContext
+from repro.serve.engine import build_serve_params
 from repro.serve.resilience import ResiliencePolicy, ResilientEngine
+from repro.serve.scheduler import Engine, Request
 from repro.sharding import partition as PT
 from repro.train.data import DataConfig, DataPipeline
 
@@ -55,9 +63,18 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--mode", default="compressed",
                     choices=["dense", "quant", "compressed"])
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests in the trace")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=3,
+                    help="decode slots in the paged-KV pool (requests "
+                         "beyond this queue and join as slots free)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page")
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="engine steps between request arrivals "
+                         "(0 = all at once)")
     ap.add_argument("--mesh", default=None,
                     help="DATA,MODEL mesh shape for sharded serving")
     ap.add_argument("--tiles", type=int, default=0,
@@ -99,7 +116,7 @@ def main():
                 lut, jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
         print(f"mesh: {dict(mesh.shape)}")
 
-    rengine = None
+    max_len = args.prompt_len + args.max_new
     if st is not None:
         # integrity gate (manifest re-hash + device invariants) runs at
         # construction when --verify is on; corrupt leaves raise
@@ -110,34 +127,43 @@ def main():
         if args.verify != "off":
             print(rengine.verify_report.summary())
             print(rengine.invariant_report.summary())
+        eng = rengine.scheduler(n_slots=args.slots, max_len=max_len,
+                                page_size=args.page_size)
+    else:
+        rengine = None
+        eng = Engine(ServeContext(cfg=cfg, mesh=mesh, lut=lut), sp,
+                     n_slots=args.slots, max_len=max_len,
+                     page_size=args.page_size)
 
-    toks = data.batch_at(0)["tokens"]
-    b, t0 = toks.shape
-    caches = LM.init_caches(cfg, b, t0 + args.max_new, dtype=jnp.float32)
-    prefill, decode = make_serve_fns(cfg, mesh=mesh)  # jitted, cached per
-    ops.DISPATCH_COUNTS.clear()                       # (config, mesh)
+    toks = np.asarray(data.batch_at(0)["tokens"])
+    arrivals = [i * args.stagger for i in range(args.batch)]
+    ops.DISPATCH_COUNTS.clear()
 
     t = time.perf_counter()
-    logits, caches = prefill(sp, lut, {"tokens": toks}, caches)
-    jax.block_until_ready(logits)
-    print(f"prefill: {1e3*(time.perf_counter()-t):.1f} ms")
-
-    tok = jnp.argmax(logits, -1)[:, None].astype(toks.dtype)
-    outs = [tok]
-    t = time.perf_counter()
-    for i in range(args.max_new - 1):
-        logits, caches = decode(sp, lut, tok, caches, t0 + i)
-        tok = jnp.argmax(logits, -1)[:, None].astype(toks.dtype)
-        outs.append(tok)
-    jax.block_until_ready(tok)
+    submitted = 0
+    while submitted < args.batch or eng.health()["occupied"] \
+            or eng.health()["queued"]:
+        while submitted < args.batch and eng.steps >= arrivals[submitted]:
+            eng.submit(Request(tokens=toks[submitted],
+                               max_new=args.max_new, rid=submitted))
+            submitted += 1
+        eng.step()
+    jax.block_until_ready(eng.pool.pages)
     dt = time.perf_counter() - t
-    print(f"decode: {args.max_new-1} steps in {1e3*dt:.1f} ms "
-          f"({b*(args.max_new-1)/dt:.1f} tok/s)")
+
+    h = eng.health()
+    n_tok = sum(c.n_generated for c in eng.completions)
+    print(f"served {h['completed']} requests / {n_tok} tokens in "
+          f"{1e3*dt:.1f} ms ({n_tok/dt:.1f} tok/s) over {h['steps']} steps")
+    print(f"occupancy: mean {h['occupancy_mean']:.2f} "
+          f"max {h['occupancy_max']} of {args.slots} slots; "
+          f"joined mid-decode: {h['joined_mid_decode']}")
     if args.mode == "compressed":
         print("matmul dispatch:", dict(ops.DISPATCH_COUNTS))
     if rengine is not None:
         print("health:", rengine.health())
-    print("sample:", np.concatenate([np.asarray(o) for o in outs], 1)[0].tolist())
+    by_rid = {c.rid: c for c in eng.completions}
+    print("sample:", by_rid[0].tokens[args.prompt_len:].tolist())
 
 
 if __name__ == "__main__":

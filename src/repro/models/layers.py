@@ -110,19 +110,28 @@ def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
 
 
 def rope_tables(positions: jax.Array, head_dim: int, theta: float):
-    """cos/sin tables for given (possibly traced) positions: (T, hd/2)."""
+    """cos/sin tables for given (possibly traced) positions.
+
+    ``positions``: (T,) — one position track shared by the whole batch —
+    or (B, T) per-row tracks (the continuous-batching decode step, where
+    every slot sits at its own offset).  Returns (..., hd/2) matching."""
     half = head_dim // 2
     freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs
     return jnp.cos(ang), jnp.sin(ang)
 
 
 def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
-    """x: (B, T, H, hd) — rotate pairs (split-half convention)."""
+    """x: (B, T, H, hd) — rotate pairs (split-half convention).  cos/sin
+    are (T, hd/2) shared across the batch or (B, T, hd/2) per-row."""
     half = x.shape[-1] // 2
     x1, x2 = x[..., :half], x[..., half:]
-    c = cos[None, :, None, :]
-    s = sin[None, :, None, :]
+    if cos.ndim == 3:
+        c = cos[:, :, None, :]
+        s = sin[:, :, None, :]
+    else:
+        c = cos[None, :, None, :]
+        s = sin[None, :, None, :]
     xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
     return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
                            axis=-1).astype(x.dtype)
@@ -183,6 +192,24 @@ def _quant_kv(x: jax.Array):
 
 def _dequant_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _kv_write(dst: jax.Array, src: jax.Array, pos) -> jax.Array:
+    """Write ``src`` (B, T, ...) into the cache ``dst`` (B, L, ...) at
+    ``pos``.
+
+    Scalar ``pos`` (train / one-shot serving): a dynamic-slice update at
+    one shared offset.  Vector ``pos`` (B,) (the continuous-batching
+    decode step — every slot at its own offset): a per-row scatter, which
+    requires T == 1.
+    """
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(dst, src, pos, axis=1)
+    if src.shape[1] != 1:
+        raise ValueError("per-slot (vector pos) cache writes decode one "
+                         f"token at a time; got T={src.shape[1]}")
+    return dst.at[jnp.arange(dst.shape[0]), pos].set(src[:, 0])
 
 
 _BATCH = ("pod", "data")
@@ -262,7 +289,10 @@ def _attend_cache_flash(q, cache_k, cache_v, pos, impl: str):
 def _attend_cached(q, cache_k, cache_v, pos, t_new: int):
     """Decode attention over a cache: mask positions > pos+t_new-1.
 
-    q: (B, T, Hq, hd); cache: (B, L, Hkv, hd); pos: scalar (traced ok).
+    q: (B, T, Hq, hd); cache: (B, L, Hkv, hd); pos: scalar (traced ok) or
+    per-row (B,) offsets (continuous batching).  Entries past a row's own
+    position get -1e30 → exp underflows to exactly 0.0, so padded / stale
+    cache regions contribute nothing — bitwise — to the softmax sums.
     """
     b, t, hq, hd = q.shape
     hkv = cache_k.shape[2]
@@ -273,9 +303,11 @@ def _attend_cached(q, cache_k, cache_v, pos, t_new: int):
     vf = cache_v.astype(jnp.float32)
     logits = jnp.einsum("btgrd,blgd->btgrl", qf, kf) / math.sqrt(hd)
     kpos = jnp.arange(lmax)
-    qpos = pos + jnp.arange(t)
-    mask = kpos[None, :] <= qpos[:, None]          # (t, L)
-    logits = jnp.where(mask[None, :, None, None, :], logits, -1e30)
+    qpos = jnp.asarray(pos)[..., None] + jnp.arange(t)   # (t,) or (B, t)
+    mask = kpos <= qpos[..., None]                       # (t, L) or (B, t, L)
+    mask = (mask[None, :, None, None, :] if mask.ndim == 2
+            else mask[:, :, None, None, :])
+    logits = jnp.where(mask, logits, -1e30)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("btgrl,blgd->btgrd", p, vf)
     return out.reshape(b, t, hq, hd).astype(q.dtype)
@@ -299,7 +331,10 @@ def apply_attention(p: Params, x: jax.Array, cfg, *, lut=None,
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
 
     pos0 = 0 if pos is None else pos
-    positions = pos0 + jnp.arange(t)
+    if jnp.ndim(pos0) == 1 and t != 1:
+        raise ValueError("vector (per-slot) pos supports single-token "
+                         f"decode only; got T={t}")
+    positions = jnp.asarray(pos0)[..., None] + jnp.arange(t)
     cos, sin = rope_tables(positions, hd, cfg.rope_theta)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
@@ -327,22 +362,16 @@ def apply_attention(p: Params, x: jax.Array, cfg, *, lut=None,
         if int8_kv:
             kq, ks = _quant_kv(k)
             vq, vs = _quant_kv(v)
-            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, pos0,
-                                                     axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, pos0,
-                                                     axis=1)
-            cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks,
-                                                      pos0, axis=1)
-            cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs,
-                                                      pos0, axis=1)
+            ck = _kv_write(cache["k"], kq, pos0)
+            cv = _kv_write(cache["v"], vq, pos0)
+            cks = _kv_write(cache["k_scale"], ks, pos0)
+            cvs = _kv_write(cache["v_scale"], vs, pos0)
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
             ck_f = _dequant_kv(ck, cks, q.dtype)
             cv_f = _dequant_kv(cv, cvs, q.dtype)
         else:
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), pos0, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
+            ck = _kv_write(cache["k"], k.astype(cache["k"].dtype), pos0)
+            cv = _kv_write(cache["v"], v.astype(cache["v"].dtype), pos0)
             new_cache = {"k": ck, "v": cv}
             ck_f, cv_f = ck, cv
         if t == 1:
@@ -441,9 +470,12 @@ def apply_mla(p: Params, x: jax.Array, cfg, *, lut=None, cache=None,
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
     pos0 = 0 if pos is None else pos
+    if jnp.ndim(pos0) == 1 and t != 1:
+        raise ValueError("vector (per-slot) pos supports single-token "
+                         f"decode only; got T={t}")
 
     q_nope, q_rope = _mla_q(p, x, cfg, lut, impl)
-    positions = pos0 + jnp.arange(t)
+    positions = jnp.asarray(pos0)[..., None] + jnp.arange(t)
     cos, sin = rope_tables(positions, dr, cfg.rope_theta)
     q_rope = apply_rope(q_rope, cos, sin)
 
@@ -474,11 +506,11 @@ def apply_mla(p: Params, x: jax.Array, cfg, *, lut=None, cache=None,
         y = linear(o.reshape(b, t, nq * dv), p["wo"], lut, impl=impl)
         return y, new_cache
 
-    # Cache updates (prefill writes T latents at pos0, decode writes 1).
-    cckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["ckv"], ckv.astype(cache["ckv"].dtype), pos0, axis=1)
-    ckrope = jax.lax.dynamic_update_slice_in_dim(
-        cache["krope"], k_rope.astype(cache["krope"].dtype), pos0, axis=1)
+    # Cache updates (prefill writes T latents at pos0, decode writes 1;
+    # vector pos0 scatters per-slot rows — continuous batching).
+    cckv = _kv_write(cache["ckv"], ckv.astype(cache["ckv"].dtype), pos0)
+    ckrope = _kv_write(cache["krope"], k_rope.astype(cache["krope"].dtype),
+                       pos0)
 
     if t > 1:
         # Prefill: materialize per-head K/V (O(L) once) and run flash — the
@@ -512,9 +544,10 @@ def apply_mla(p: Params, x: jax.Array, cfg, *, lut=None, cache=None,
     logits = (s_nope + s_rope) / math.sqrt(dn + dr)
     lmax = cckv.shape[1]
     kpos = jnp.arange(lmax)
-    qpos = pos0 + jnp.arange(t)
-    mask = kpos[None, :] <= qpos[:, None]
-    logits = jnp.where(mask[None, :, None, :], logits, -1e30)
+    qpos = jnp.asarray(pos0)[..., None] + jnp.arange(t)  # (t,) or (B, t)
+    mask = kpos <= qpos[..., None]                       # (t, L) or (B, t, L)
+    mask = mask[None, :, None, :] if mask.ndim == 2 else mask[:, :, None, :]
+    logits = jnp.where(mask, logits, -1e30)
     attn = jax.nn.softmax(logits, axis=-1)
     o_lat = jnp.einsum("bthl,blr->bthr", attn, cckv.astype(jnp.float32))
     o = jnp.einsum("bthr,hdr->bthd", o_lat, w_v.astype(jnp.float32))

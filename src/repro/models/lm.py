@@ -338,3 +338,41 @@ def init_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
                      for _ in range(len(segs) - 1)],
         }
     raise ValueError(fam)
+
+
+def cache_batch_time_axes(cfg):
+    """Per-leaf ``(batch_axis, time_axis)`` for this config's serving cache.
+
+    The paged KV pool (serve/kv_cache.py) slices and scatters cache leaves
+    along their batch (slot/page) and time axes.  Rather than hard-coding
+    each layout — stacked ``(L, B, T, ...)`` block leaves, per-layer
+    ``(B, T, ...)`` list leaves, MLA latent planes, int8-KV scale planes —
+    the axes are derived structurally: ``eval_shape`` over
+    :func:`init_caches` at distinguishing batch/length values, the axis
+    that moves with each argument is the answer.  The result is a pytree
+    of ``(batch, time)`` tuples matching the cache structure (read it with
+    ``is_leaf=lambda x: isinstance(x, tuple)``).
+
+    Families whose recurrent state has no time axis (ssm/hybrid mamba
+    caches) raise ``ValueError`` — they cannot back a paged KV pool.
+    """
+    a = jax.eval_shape(lambda: init_caches(cfg, 2, 7))
+    b = jax.eval_shape(lambda: init_caches(cfg, 3, 7))
+    c = jax.eval_shape(lambda: init_caches(cfg, 2, 9))
+
+    def axes(sa, sb, sc):
+        batch = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                 if x != y]
+        time = [i for i, (x, y) in enumerate(zip(sa.shape, sc.shape))
+                if x != y]
+        if len(batch) != 1 or len(time) != 1:
+            raise ValueError(
+                f"cache leaf {sa.shape} has no unambiguous (batch, time) "
+                f"axes — family {cfg.family!r} cannot back a paged KV pool")
+        if time[0] != batch[0] + 1:
+            raise ValueError(
+                f"cache leaf {sa.shape}: time axis {time[0]} is not "
+                f"adjacent to batch axis {batch[0]}")
+        return (batch[0], time[0])
+
+    return jax.tree_util.tree_map(axes, a, b, c)

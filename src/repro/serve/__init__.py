@@ -1,8 +1,30 @@
-"""Serving runtime: compressed-weight prefill/decode (the paper's system)."""
-from .engine import ServeState, build_serve_params, make_serve_fns, generate
+"""Serving runtime: compressed-weight prefill/decode (the paper's system).
+
+Two API levels:
+
+  * **Request level** (preferred) — ``Engine.submit(Request) / step() /
+    drain()``: a continuous-batching scheduler over a paged KV pool
+    (``scheduler`` / ``kv_cache``).  Requests join and leave a running
+    decode loop per engine tick; outputs are bitwise-equal to one-shot
+    ``generate`` of the same prompt.  ``ResilientEngine.scheduler()``
+    wraps every jitted step in the retry/degradation ladder.
+  * **Fixed-batch compat** — ``make_serve_fns``/``generate`` serve one
+    rectangular batch end-to-end; they remain the substrate the scheduler
+    builds on (prefill closures, the sampling helper) and the surface the
+    benchmarks and older drivers use.
+
+``ServeContext`` bundles (cfg, mesh, lut, verify) for every entry point;
+loose ``lut=``/``mesh=`` kwargs are deprecated.
+"""
+from .context import ServeContext
+from .engine import (ServeState, build_serve_params, generate,
+                     make_serve_fns, sample_tokens)
+from .kv_cache import PagedKVPool
 from .resilience import (FALLBACK_COUNTS, DeadlineExceeded, ResiliencePolicy,
                          ResilientEngine, ServeRefused)
+from .scheduler import Completion, Engine, Request
 
 __all__ = ["ServeState", "build_serve_params", "make_serve_fns", "generate",
-           "ResilientEngine", "ResiliencePolicy", "FALLBACK_COUNTS",
-           "DeadlineExceeded", "ServeRefused"]
+           "sample_tokens", "ServeContext", "Engine", "Request", "Completion",
+           "PagedKVPool", "ResilientEngine", "ResiliencePolicy",
+           "FALLBACK_COUNTS", "DeadlineExceeded", "ServeRefused"]

@@ -1,0 +1,46 @@
+"""ServeContext — one bundle for the serving invariants.
+
+``make_serve_fns``/``generate`` historically threaded ``lut`` and ``mesh``
+as loose keyword arguments through several private layers (and every new
+serving entry point had to re-plumb them).  ``ServeContext`` carries the
+full set — config, mesh, decode LUT, verify mode — as one object that the
+engine, the continuous-batching scheduler, and the resilience wrapper all
+share.  The loose ``lut=``/``mesh=`` kwargs still work but are deprecated
+(they warn; see ``engine.generate``).
+
+Only ``cfg`` and ``mesh`` participate in jit cache keys (both hashable);
+``lut`` is an ordinary traced array and ``verify`` is host-side policy, so
+the context itself is compared by identity (``eq=False``) — two contexts
+over the same artifact are interchangeable, not equal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ServeContext:
+    """Everything a serving call needs beyond (params, tokens).
+
+    cfg:    the model config (hashable; jit static key).
+    mesh:   concrete jax Mesh for sharded serving, or None (static key).
+    lut:    the model-wide dictionary LUT for compressed decode, or None.
+    verify: integrity-gate level — 'off' | 'fast' | 'full' (host policy,
+            consumed by ResilientEngine / launch drivers, not by jit).
+    """
+    cfg: Any
+    mesh: Any = None
+    lut: Any = None
+    verify: str = "off"
+
+    @classmethod
+    def from_state(cls, cfg, state, *, mesh=None,
+                   verify: Optional[str] = None) -> "ServeContext":
+        """Build from an ``engine.ServeState`` (lut comes off the state)."""
+        return cls(cfg=cfg, mesh=mesh, lut=state.lut,
+                   verify=verify if verify is not None else "off")
+
+    def with_cfg(self, cfg) -> "ServeContext":
+        """Same artifact, different (e.g. ladder-rung-suffixed) config."""
+        return dataclasses.replace(self, cfg=cfg)

@@ -23,6 +23,15 @@ Pipeline (paper §2.3 "inference", adapted per DESIGN.md §2):
 Weight modes mirror the paper's evaluation triple:
   dense → "llama3.2-*", quant → "* Quantized", compressed → "* Compressed".
 
+Request-level serving lives one layer up: ``serve.scheduler.Engine``
+(continuous batching over a paged KV pool, ``submit``/``step``/``drain``)
+reuses this module's ``prefill``/``decode_step`` closures and the shared
+``sample_tokens`` rule, so its per-request outputs are bitwise-equal to
+one-shot ``generate`` runs of the same prompts.  ``make_serve_fns`` and
+``generate`` stay as the fixed-batch compatibility surface; both accept a
+``ServeContext`` (serve/context.py) in place of the deprecated loose
+``lut=``/``mesh=`` kwargs.
+
 Resilience (core/integrity.py + serve/resilience.py): ``build_serve_
 params`` also emits a per-plane integrity manifest (CRC32 over every
 codes/literals/nlit/scale/zero plane, the model-wide LUT and the table)
@@ -44,6 +53,7 @@ import collections
 import contextlib
 import dataclasses
 import functools
+import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -267,7 +277,7 @@ def build_serve_params(params: Any, policy: CompressionPolicy,
 TRACE_COUNTS = collections.Counter()
 
 
-def make_serve_fns(cfg, *, jit: bool = True, mesh=None):
+def make_serve_fns(cfg=None, *, jit: bool = True, mesh=None, ctx=None):
     """Returns (prefill, decode_step) for serving.
 
     prefill(params, lut, tokens_or_embeds, caches) -> (last_logits, caches)
@@ -278,13 +288,25 @@ def make_serve_fns(cfg, *, jit: bool = True, mesh=None):
     — ``examples/serve_batched.py``, ``benchmarks/latency.py`` — never
     re-trace per call.  ``jit=False`` returns the raw closures for callers
     that apply their own pjit shardings (launch/dryrun) or embed the step
-    in a larger traced computation (the ``generate`` scan loop).
+    in a larger traced computation (the ``generate`` scan loop / the
+    scheduler's ``generate_step``).
 
-    ``mesh``: a concrete Mesh made visible (``partition.active_mesh``) at
-    trace time, so in-graph constraints and the shard-mapped fused
+    ``ctx``: a ``ServeContext`` — the preferred way to carry (cfg, mesh);
+    passing ``mesh`` loosely still works but is deprecated (warns).  A
+    concrete mesh is made visible (``partition.active_mesh``) at trace
+    time, so in-graph constraints and the shard-mapped fused
     decode→dequant→matmul paths see it; the jit cache keys on (cfg, mesh),
     so mesh-less and sharded closures never share a stale trace.
+
+    ``decode_step``'s ``pos`` is a scalar offset shared by the whole batch
+    *or* a per-row (B,) vector (the continuous-batching paged view — see
+    ``models.layers._kv_write`` / ``serve.scheduler``).
     """
+    if ctx is not None:
+        cfg = ctx.cfg if cfg is None else cfg
+        mesh = ctx.mesh
+    elif mesh is not None:
+        _warn_loose_kwargs("make_serve_fns")
     if jit:
         return _jitted_serve_fns(cfg, mesh)
     return _raw_serve_fns(cfg)
@@ -355,6 +377,36 @@ def _raw_serve_fns(cfg):
     return prefill, decode_step
 
 
+def sample_tokens(logits, temperature, key=None):
+    """The one next-token rule for every decode path.
+
+    The legacy one-shot loop (``_decode_loop``) and the continuous-batching
+    ``scheduler._generate_step`` both sample through here, so greedy /
+    temperature sampling cannot drift between the two — single-request
+    parity between them is *bitwise*.
+
+    logits: (B, V).  Three modes:
+      * ``key=None`` or scalar ``temperature <= 0`` → greedy argmax.
+      * scalar ``temperature`` + key → ``categorical(key, logits / T)``
+        (identical to the historical in-loop sampling).
+      * array ``temperature`` (B,) + per-row keys (B, 2) → vmapped
+        per-row categorical; rows with temperature 0 take the argmax
+        result exactly (bitwise equal to the greedy path).
+    Returns (B,) token ids.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    if key is None:
+        return greedy
+    if jnp.ndim(temperature) == 0:
+        if isinstance(temperature, (int, float)) and temperature <= 0:
+            return greedy
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    temp = jnp.asarray(temperature, jnp.float32)
+    sampled = jax.vmap(jax.random.categorical)(
+        key, logits / jnp.maximum(temp, 1e-6)[:, None])
+    return jnp.where(temp > 0, sampled, greedy)
+
+
 @partial(jax.jit, static_argnums=(0, 1, 2, 3))
 def _decode_loop(cfg, steps: int, temperature: float, mesh,
                  params, lut, tok0, caches, pos0, key):
@@ -373,10 +425,10 @@ def _decode_loop(cfg, steps: int, temperature: float, mesh,
         logits, caches = decode_step(params, lut, tok, caches, pos)
         if sample:
             key, sub = jax.random.split(key)
-            nxt = jax.random.categorical(
-                sub, logits / temperature, axis=-1)[:, None].astype(tok.dtype)
+            nxt = sample_tokens(logits, temperature,
+                                sub)[:, None].astype(tok.dtype)
         else:
-            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(tok.dtype)
+            nxt = sample_tokens(logits, 0.0)[:, None].astype(tok.dtype)
         return (nxt, caches, pos + 1, key), nxt
 
     init = (tok0, caches, jnp.asarray(pos0, jnp.int32), key)
@@ -385,28 +437,49 @@ def _decode_loop(cfg, steps: int, temperature: float, mesh,
     return jnp.swapaxes(toks[..., 0], 0, 1)        # (steps, B, 1) -> (B, steps)
 
 
-def generate(params, cfg, tokens, *, lut=None, max_new: int = 16,
+def _warn_loose_kwargs(caller: str):
+    warnings.warn(
+        f"{caller}: loose lut=/mesh= kwargs are deprecated — pass "
+        "ctx=ServeContext(cfg, mesh=..., lut=...) (repro.serve.context) "
+        "instead", DeprecationWarning, stacklevel=3)
+
+
+def generate(params, cfg, tokens, *, ctx=None, lut=None, max_new: int = 16,
              max_len: int | None = None, temperature: float = 0.0,
              key=None, embeds=None, mesh=None):
-    """Greedy/sampled generation (examples + accuracy benchmarks).
+    """One-shot greedy/sampled generation (examples + accuracy benchmarks).
 
     Prefill runs once under jit; the decode phase is a single jitted
     ``lax.scan`` over ``decode_step`` (see ``_decode_loop``), so compressed
     layers hit the fused decode→dequant→matmul kernel back-to-back with no
-    per-token host sync or retrace.  Pass ``mesh`` to serve sharded: the
-    same single-trace loop then dispatches through the shard-mapped fused
-    paths (see ``ops.decode_dequant_matmul``).
+    per-token host sync or retrace.  Serve sharded by passing a mesh (via
+    ``ctx``): the same single-trace loop then dispatches through the
+    shard-mapped fused paths (see ``ops.decode_dequant_matmul``).
+
+    ``ctx``: a ``ServeContext`` carrying (cfg, mesh, lut) — the preferred
+    spelling; the loose ``lut=``/``mesh=`` kwargs remain as a deprecated
+    compatibility path (they warn).  For request-level serving — admission
+    into a running batch, per-request completion — use
+    ``serve.scheduler.Engine`` instead; this entry point stays the
+    fixed-batch reference the scheduler's outputs are bitwise-checked
+    against.
     """
+    if ctx is not None:
+        cfg = ctx.cfg if cfg is None else cfg
+        lut, mesh = ctx.lut, ctx.mesh
+    elif lut is not None or mesh is not None:
+        _warn_loose_kwargs("generate")
     if max_new <= 0:
         return tokens
     b, t0 = tokens.shape
     extra = embeds.shape[1] if embeds is not None else 0
     max_len = max_len or (t0 + extra + max_new)
     caches = LM.init_caches(cfg, b, max_len)
-    prefill, _ = make_serve_fns(cfg, mesh=mesh)
+    from repro.serve.context import ServeContext
+    prefill, _ = make_serve_fns(ctx=ServeContext(cfg=cfg, mesh=mesh, lut=lut))
     logits, caches = prefill(params, lut,
                              {"tokens": tokens, "embeds": embeds}, caches)
-    tok0 = jnp.argmax(logits, axis=-1)[:, None].astype(tokens.dtype)
+    tok0 = sample_tokens(logits, 0.0)[:, None].astype(tokens.dtype)
     if max_new <= 1:
         return jnp.concatenate([tokens, tok0], axis=1)
     toks = _decode_loop(cfg, max_new - 1, float(temperature), mesh,

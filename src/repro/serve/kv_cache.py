@@ -1,0 +1,171 @@
+"""Paged KV cache — the memory substrate of the continuous-batching engine.
+
+A fixed pool of KV *pages* backs a fixed set of decode *slots*.  Each slot
+owns ``pages_per_slot`` pages, assembled through a per-slot page table
+into a contiguous-looking cache view of length ``max_len``:
+
+  * ``PagedKVPool`` — host-side allocator.  The device state is one cache
+    pytree shaped exactly like ``LM.init_caches(cfg, n_pages, page_size)``
+    (batch axis = page id, time axis = in-page offset), so every cache
+    layout the model zoo produces — stacked ``(L, B, T, ...)`` block
+    leaves, per-layer list leaves, MLA latent planes, int8-KV scale
+    planes — pages uniformly.  Per-leaf (batch, time) axes come from
+    ``LM.cache_batch_time_axes`` (families without a time axis — ssm /
+    hybrid recurrent state — are rejected there).
+  * ``paged_view(cfg, pages, page_table)`` — gather the pool into the
+    per-slot ``(n_slots, max_len, ...)`` view the model's decode step
+    consumes.  Pure and traceable: it runs *inside* the jitted
+    ``generate_step``, and page-table contents are traced values, so
+    admissions never retrace.
+  * ``write_token(...)`` — scatter the cache entries a decode step wrote
+    at each slot's position back into the pool.  Inactive slots write to
+    an out-of-range page id and are dropped (``mode='drop'``), so a freed
+    slot can never clobber pages that now belong to another request.
+  * ``insert_fragment(...)`` — copy a prefill fragment (a batch-1,
+    ``max_len``-long cache) over the slot's whole page set.  Overwriting
+    the full region — zero tail included — is what makes page reuse safe:
+    a new tenant never sees the previous tenant's KV, and the view is
+    bitwise-identical to the zero-initialized cache a one-shot
+    ``generate`` of the same prompt would hold.
+
+Pages are fungible across slots: ``alloc`` hands out whatever is on the
+free list (LIFO, so reuse is immediate and the stale-KV tests actually
+exercise cross-request reuse), ``free`` returns a completed slot's pages.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple)
+
+
+@functools.lru_cache(maxsize=None)
+def _axes_leaves(cfg) -> tuple:
+    """Flattened per-leaf (batch_axis, time_axis), cached per config."""
+    tree = LM.cache_batch_time_axes(cfg)
+    return tuple(jax.tree_util.tree_leaves(tree, is_leaf=_is_axes))
+
+
+def paged_view(cfg, pages, page_table):
+    """Assemble per-slot contiguous cache views from the page pool.
+
+    ``page_table``: (n_slots, pages_per_slot) int32 page ids (traced ok).
+    Returns a cache pytree shaped like ``init_caches(cfg, n_slots,
+    pages_per_slot * page_size)`` — what the decode step consumes.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(pages)
+    axes = _axes_leaves(cfg)
+    flat = page_table.reshape(-1)
+    n_slots = page_table.shape[0]
+    out = []
+    for leaf, (ba, ta) in zip(leaves, axes):
+        v = jnp.take(leaf, flat, axis=ba)
+        out.append(v.reshape(v.shape[:ba] + (n_slots, -1)
+                             + v.shape[ta + 1:]))
+    return treedef.unflatten(out)
+
+
+def write_token(cfg, page_size: int, pages, view, page_table, pos, active):
+    """Scatter each slot's cache entry at ``pos`` from ``view`` into pages.
+
+    ``view`` is the (functionally) updated cache the decode step returned —
+    only the entry at each slot's own position is new; everything else
+    already lives in the pool.  ``active`` (n_slots,) bool: inactive slots
+    get an out-of-range page id and drop, so garbage rows from vacant
+    slots never reach storage.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(pages)
+    vleaves = jax.tree_util.tree_leaves(view)
+    axes = _axes_leaves(cfg)
+    n_pages = leaves[0].shape[axes[0][0]]
+    page_of = jnp.take_along_axis(
+        page_table, (pos // page_size)[:, None], axis=1)[:, 0]
+    page = jnp.where(active, page_of, n_pages)            # OOB when inactive
+    off = pos % page_size
+    out = []
+    for leaf, vleaf, (ba, ta) in zip(leaves, vleaves, axes):
+        idx_shape = [1] * vleaf.ndim
+        idx_shape[ba] = pos.shape[0]
+        idx = pos.reshape(idx_shape)
+        ent = jnp.take_along_axis(vleaf, idx, axis=ta)
+        ent = jnp.squeeze(ent, axis=ta)
+        sel = (slice(None),) * ba + (page, off)
+        out.append(leaf.at[sel].set(ent, mode="drop"))
+    return treedef.unflatten(out)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def insert_fragment(cfg, page_size: int, pages, fragment, page_row):
+    """Copy a prefill fragment over one slot's page set.
+
+    ``fragment``: cache pytree with batch 1 and time ``pages_per_slot *
+    page_size`` (the prefill's working cache).  ``page_row``: (pages_per_
+    slot,) page ids owned by the slot.  The whole region is overwritten —
+    the fragment's zero tail included — so the previous tenant's KV can
+    never leak into the new request's view.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(pages)
+    fleaves = jax.tree_util.tree_leaves(fragment)
+    axes = _axes_leaves(cfg)
+    npr = page_row.shape[0]
+    out = []
+    for leaf, fleaf, (ba, ta) in zip(leaves, fleaves, axes):
+        resh = fleaf.reshape(fleaf.shape[:ba] + (npr, page_size)
+                             + fleaf.shape[ta + 1:])
+        sel = (slice(None),) * ba + (page_row,)
+        out.append(leaf.at[sel].set(resh.astype(leaf.dtype)))
+    return treedef.unflatten(out)
+
+
+class PagedKVPool:
+    """Host-side page allocator over a device-resident cache pool.
+
+    ``pages`` is the functional device state (replaced wholesale by
+    ``insert``/scheduler writes); the page table and free list are plain
+    host state — admission decisions never touch the device.
+    """
+
+    def __init__(self, cfg, n_slots: int, max_len: int, *,
+                 page_size: int = 8, dtype=jnp.bfloat16):
+        _axes_leaves(cfg)             # fail fast on unsupported families
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.pages_per_slot = -(-max_len // page_size)
+        self.max_len = self.pages_per_slot * page_size
+        self.n_pages = n_slots * self.pages_per_slot
+        self.pages = LM.init_caches(cfg, self.n_pages, page_size, dtype)
+        self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self.free_pages: List[int] = list(range(self.n_pages))
+        self._owned = [False] * n_slots
+
+    def alloc(self, slot: int) -> np.ndarray:
+        """Claim ``pages_per_slot`` pages for ``slot`` (LIFO reuse)."""
+        assert not self._owned[slot], f"slot {slot} already owns pages"
+        if len(self.free_pages) < self.pages_per_slot:
+            raise RuntimeError("page pool exhausted")
+        row = [self.free_pages.pop() for _ in range(self.pages_per_slot)]
+        self.page_table[slot] = row
+        self._owned[slot] = True
+        return self.page_table[slot]
+
+    def free(self, slot: int) -> None:
+        """Return ``slot``'s pages to the free list."""
+        if self._owned[slot]:
+            self.free_pages.extend(int(p) for p in self.page_table[slot])
+            self._owned[slot] = False
+
+    def insert(self, fragment, slot: int) -> None:
+        """Write a prefill fragment into ``slot``'s pages (jitted scatter)."""
+        row = jnp.asarray(self.page_table[slot])
+        self.pages = insert_fragment(self.cfg, self.page_size, self.pages,
+                                     fragment, row)

@@ -29,6 +29,12 @@ with:
   * **Per-request deadline** — ``deadline_s`` (policy or per-call) bounds
     the whole retry/ladder walk; expiry raises ``DeadlineExceeded``
     instead of burning the remaining rungs.
+
+The same machinery covers the continuous-batching path:
+``ResilientEngine.scheduler()`` returns a ``serve.scheduler.Engine`` whose
+jitted prefill and ``generate_step`` calls each walk the ladder through
+the ``_guard`` hook — one faulty decode tick degrades (and re-traces)
+without tearing down the whole serving loop or its co-tenant requests.
 """
 from __future__ import annotations
 
@@ -54,7 +60,9 @@ FALLBACK_COUNTS = collections.Counter()
 # Ladder rung -> the ops session impl that forces it.  'fused' serves with
 # the session default ('auto': megakernel dispatch); the fallbacks pin the
 # lever so every compressed matmul in the re-traced program takes the rung.
-_RUNG_IMPL = {"fused": None, "unfused": "unfused", "materialize": "materialize"}
+_RUNG_IMPL = {ops.FUSED_RUNG: None,
+              ops.Impl.UNFUSED.value: ops.Impl.UNFUSED.value,
+              ops.Impl.MATERIALIZE.value: ops.Impl.MATERIALIZE.value}
 
 
 class DeadlineExceeded(TimeoutError):
@@ -75,7 +83,7 @@ class ServeRefused(RuntimeError):
 class ResiliencePolicy:
     max_retries: int = 1                  # per rung, on JaxRuntimeError
     deadline_s: float = 0.0               # 0 = no per-request deadline
-    ladder: tuple = ("fused", "unfused", "materialize")
+    ladder: tuple = ops.DEFAULT_LADDER
     verify: str = "off"                   # off | fast | full (boot gate)
 
 
@@ -86,7 +94,9 @@ def _generate(params, cfg, tokens, **kw):
 
 def _prefill(cfg, mesh, params, lut, batch, caches):
     """Seam mirroring :func:`_generate` for the prefill path."""
-    prefill, _ = _engine.make_serve_fns(cfg, mesh=mesh)
+    from repro.serve.context import ServeContext
+    prefill, _ = _engine.make_serve_fns(
+        ctx=ServeContext(cfg=cfg, mesh=mesh, lut=lut))
     return prefill(params, lut, batch, caches)
 
 
@@ -215,13 +225,17 @@ class ResilientEngine:
     def generate(self, tokens, *, max_new: int = 16, temperature: float = 0.0,
                  key=None, embeds=None, max_len: int | None = None,
                  deadline_s: float | None = None):
+        from repro.serve.context import ServeContext
+
         def make_call(rung):
             cfg = self._rung_cfg(rung)
+            ctx = ServeContext(cfg=cfg, mesh=self.mesh, lut=self.state.lut,
+                               verify=self.policy.verify)
             return lambda: _generate(self.state.params, cfg, tokens,
-                                     lut=self.state.lut, max_new=max_new,
+                                     ctx=ctx, max_new=max_new,
                                      max_len=max_len,
                                      temperature=temperature, key=key,
-                                     embeds=embeds, mesh=self.mesh)
+                                     embeds=embeds)
         return self._with_ladder(make_call, deadline_s=deadline_s)
 
     def prefill(self, batch, caches, *, deadline_s: float | None = None):
@@ -230,6 +244,26 @@ class ResilientEngine:
             return lambda: _prefill(cfg, self.mesh, self.state.params,
                                     self.state.lut, batch, caches)
         return self._with_ladder(make_call, deadline_s=deadline_s)
+
+    def _guard(self, call, kind: str):
+        """Scheduler guard hook: run one jitted engine call (``call(cfg)``,
+        kind 'prefill'|'decode') under the retry/deadline/ladder walk.
+        Each rung substitutes its suffixed config, so a broken fused
+        generate_step re-traces unfused instead of reusing the bad trace."""
+        return self._with_ladder(
+            lambda rung: (lambda: call(self._rung_cfg(rung))),
+            deadline_s=None)
+
+    def scheduler(self, **engine_kw):
+        """A continuous-batching ``scheduler.Engine`` whose every jitted
+        prefill/decode step walks this engine's resilience ladder.  Keyword
+        args (``n_slots``, ``max_len``, ``page_size``, ...) pass through."""
+        from repro.serve.context import ServeContext
+        from repro.serve import scheduler as _sched
+        ctx = ServeContext(cfg=self.cfg, mesh=self.mesh, lut=self.state.lut,
+                           verify=self.policy.verify)
+        return _sched.Engine(ctx, self.state.params, guard=self._guard,
+                             **engine_kw)
 
     def health(self) -> dict:
         """Snapshot for operators/CI: verify + probe counters + last rung."""

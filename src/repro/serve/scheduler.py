@@ -1,0 +1,311 @@
+"""Continuous-batching scheduler — the request-level serving API.
+
+The one-shot ``engine.generate`` runs a fixed batch through a single
+``lax.scan``: no request can join or leave a running decode loop, so real
+traffic (staggered arrivals, varied lengths) serializes.  This module is
+the serving front door built on the prefill→insert→generate-step split:
+
+  * ``Request``/``Completion`` — the public dataclasses.  A request is a
+    prompt plus decode budget (``max_new``), optional ``eos_id``, and
+    sampling controls; a completion carries the full ``generate``-shaped
+    token sequence plus lifecycle metadata (submit/finish step, reason).
+  * ``Engine.submit(request)`` — queue a request (returns its rid).
+  * ``Engine.step()`` — one engine tick: admit queued requests into free
+    decode slots (jitted prefill into a cache *fragment*, then
+    ``kv_cache.insert_fragment`` into the slot's pages), advance every
+    occupied slot one token with the jitted ``_generate_step``, and
+    retire slots that hit EOS or their ``max_new`` budget — freeing their
+    pages for the next queued request.  Returns the requests completed by
+    this tick.
+  * ``Engine.drain()`` — step until queue and slots are empty.
+
+``_generate_step`` is jitted once per (cfg, mesh): the paged view, the
+per-slot position vector, the active mask, and the page table are all
+*traced* values, so admissions and completions never retrace.  Each tick
+advances all occupied slots with per-slot position/length masks — vacant
+slots compute garbage that is masked out of storage by the
+``write_token`` OOB-drop scatter.
+
+Parity invariant (the acceptance bar): a request served through the
+engine yields tokens bitwise-equal to ``engine.generate`` of the same
+prompt with ``max_len=engine.pool.max_len``.  The ingredients: prefill
+uses the *same* jitted closure over the same cache shape; masked cache
+entries (-1e30 → exp underflows to exactly 0.0) contribute nothing to the
+softmax sums regardless of what stale pages hold; and both paths sample
+through ``engine.sample_tokens``.  MoE configs additionally need the
+dropless regime (``capacity_factor >= n_experts / top_k``) — expert
+capacity depends on batch size, so capacity *drops* may differ between
+batch shapes.
+
+``ResilientEngine.scheduler()`` wraps every jitted step in the
+retry/deadline/degradation ladder via the ``guard`` hook — see
+serve/resilience.py and docs/serving.md.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+from functools import partial
+from typing import Any, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+from repro.serve import engine as _engine
+from repro.serve.context import ServeContext
+from repro.serve.kv_cache import PagedKVPool, paged_view, write_token
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    tokens: (T,) int prompt.  max_new: decode budget, generated tokens
+    including the one the prefill emits.  eos_id: stop token (the emitted
+    sequence includes it).  temperature/seed: sampling controls — the
+    per-request PRNG is folded with the absolute position each step, so
+    tokens are reproducible regardless of slot placement or co-tenants.
+    """
+    tokens: Any
+    max_new: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    seed: int = 0
+    rid: Optional[int] = None          # assigned by submit() when None
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: ``tokens`` is prompt + generated, exactly the
+    shape one-shot ``generate`` returns for the same prompt."""
+    rid: int
+    prompt: np.ndarray
+    tokens: np.ndarray
+    n_generated: int
+    finished: str                      # 'eos' | 'max_new'
+    submitted_step: int
+    finished_step: int
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side record of an occupied decode slot."""
+    rid: int
+    prompt: np.ndarray
+    out: List[int]                     # generated tokens so far
+    pos: int                           # next cache write position
+    max_new: int
+    eos_id: Optional[int]
+    temperature: float
+    key: np.ndarray                    # (2,) uint32 per-request PRNG
+    submitted_step: int
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _generate_step(cfg, mesh, page_size: int, params, lut, pages,
+                   page_table, tok, pos, active, temp, keys):
+    """Advance every occupied slot one token (single trace per (cfg, mesh)).
+
+    pages: the paged KV pool pytree.  page_table: (B, npr) int32.  tok:
+    (B, 1) last tokens.  pos: (B,) per-slot write positions.  active:
+    (B,) bool.  temp: (B,) f32.  keys: (B, 2) uint32 per-request PRNG.
+    Returns (new pages, (B,) next tokens).
+    """
+    _engine.TRACE_COUNTS["generate_step"] += 1
+    _, decode_step = _engine._raw_serve_fns(cfg)
+    with _engine._mesh_ctx(mesh):
+        view = paged_view(cfg, pages, page_table)
+        logits, new_view = decode_step(params, lut, tok, view, pos)
+        subs = jax.vmap(jax.random.fold_in)(keys, pos)
+        nxt = _engine.sample_tokens(logits, temp, subs)
+        pages = write_token(cfg, page_size, pages, new_view, page_table,
+                            pos, active)
+    return pages, nxt
+
+
+class Engine:
+    """Continuous-batching serve engine over a paged KV pool.
+
+    ctx: ``ServeContext`` (cfg, mesh, lut).  params: served weights (the
+    ``ServeState.params`` pytree).  n_slots × max_len sizes the decode
+    pool (max_len rounds up to a page multiple — read it back from
+    ``engine.pool.max_len``).  ``guard`` hooks every jitted call:
+    ``guard(call, kind)`` with ``call(cfg) -> result`` and kind in
+    {'prefill', 'decode'} — the resilience ladder substitutes
+    rung-suffixed configs and retries here (``ResilientEngine.scheduler``).
+    """
+
+    def __init__(self, ctx: ServeContext, params, *, n_slots: int = 4,
+                 max_len: int = 64, page_size: int = 8,
+                 dtype=jnp.bfloat16, guard=None):
+        self.ctx = ctx
+        self.params = params
+        self.pool = PagedKVPool(ctx.cfg, n_slots, max_len,
+                                page_size=page_size, dtype=dtype)
+        self.guard = guard or (lambda call, kind: call(self.ctx.cfg))
+        self._queue: collections.deque = collections.deque()
+        self._slots: List[Optional[_Slot]] = [None] * n_slots
+        self._rid = itertools.count()
+        self.steps = 0
+        self.completions: List[Completion] = []
+        self.stats = {"admitted": 0, "joined_mid_decode": 0,
+                      "occupancy": []}
+
+    # -- public API ----------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its rid.  Admission happens on the
+        next ``step()`` when a slot (and its pages) free up."""
+        toks = np.asarray(request.tokens, np.int32).reshape(-1)
+        if toks.size == 0:
+            raise ValueError("empty prompt")
+        if request.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if toks.size + request.max_new > self.pool.max_len:
+            raise ValueError(
+                f"prompt ({toks.size}) + max_new ({request.max_new}) "
+                f"exceeds pool max_len ({self.pool.max_len})")
+        rid = request.rid if request.rid is not None else next(self._rid)
+        self._queue.append(dataclasses.replace(request, tokens=toks,
+                                               rid=rid))
+        return rid
+
+    def step(self) -> List[Completion]:
+        """One engine tick: admit → decode one token → retire.  Returns
+        the completions this tick produced."""
+        done = self._admit()
+        occ = [i for i, s in enumerate(self._slots) if s is not None]
+        self.stats["occupancy"].append(len(occ))
+        if occ:
+            done.extend(self._decode_tick())
+        self.steps += 1
+        self.completions.extend(done)
+        return done
+
+    def drain(self, max_steps: int = 100_000) -> List[Completion]:
+        """Step until the queue and all slots are empty; returns the
+        completions produced while draining."""
+        out: List[Completion] = []
+        while self._queue or any(s is not None for s in self._slots):
+            out.extend(self.step())
+            max_steps -= 1
+            if max_steps <= 0:
+                raise RuntimeError("drain did not converge")
+        return out
+
+    def health(self) -> dict:
+        occ = self.stats["occupancy"]
+        return {
+            "steps": self.steps,
+            "queued": len(self._queue),
+            "occupied": sum(s is not None for s in self._slots),
+            "admitted": self.stats["admitted"],
+            "joined_mid_decode": self.stats["joined_mid_decode"],
+            "occupancy_mean": float(np.mean(occ)) if occ else 0.0,
+            "occupancy_max": int(np.max(occ)) if occ else 0,
+            "completed": len(self.completions),
+            "free_pages": len(self.pool.free_pages),
+        }
+
+    # -- internals -----------------------------------------------------
+    def _prefill(self, req: Request):
+        """Jitted prefill into a fresh ``max_len``-long cache fragment —
+        the same closure and cache shape one-shot ``generate`` uses, so
+        the fragment is bitwise what generate's cache would hold."""
+        toks = jnp.asarray(req.tokens[None, :])
+        caches = LM.init_caches(self.ctx.cfg, 1, self.pool.max_len)
+
+        def call(cfg):
+            prefill, _ = _engine.make_serve_fns(
+                ctx=self.ctx.with_cfg(cfg))
+            return prefill(self.params, self.ctx.lut,
+                           {"tokens": toks, "embeds": None}, caches)
+
+        logits, frag = self.guard(call, "prefill")
+        tok0 = int(np.asarray(_engine.sample_tokens(logits, 0.0))[0])
+        return tok0, frag
+
+    def _admit(self) -> List[Completion]:
+        """Move queued requests into free slots (prefill → insert)."""
+        done: List[Completion] = []
+        while self._queue:
+            free = [i for i, s in enumerate(self._slots) if s is None]
+            if not free:
+                break
+            req = self._queue.popleft()
+            tok0, frag = self._prefill(req)
+            self.stats["admitted"] += 1
+            if any(s is not None for s in self._slots):
+                self.stats["joined_mid_decode"] += 1
+            if req.max_new == 1 or (req.eos_id is not None
+                                    and tok0 == req.eos_id):
+                done.append(self._completion(
+                    req.rid, req.tokens, [tok0],
+                    "eos" if (req.eos_id is not None and tok0 == req.eos_id)
+                    else "max_new", self.steps))
+                continue
+            slot = free[0]
+            self.pool.alloc(slot)
+            self.pool.insert(frag, slot)
+            self._slots[slot] = _Slot(
+                rid=req.rid, prompt=req.tokens, out=[tok0],
+                pos=len(req.tokens), max_new=req.max_new,
+                eos_id=req.eos_id, temperature=req.temperature,
+                key=np.asarray(jax.random.PRNGKey(req.seed), np.uint32),
+                submitted_step=self.steps)
+        return done
+
+    def _decode_tick(self) -> List[Completion]:
+        b = self.pool.n_slots
+        tok = np.zeros((b, 1), np.int32)
+        pos = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        temp = np.zeros((b,), np.float32)
+        keys = np.zeros((b, 2), np.uint32)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            tok[i, 0] = s.out[-1]
+            pos[i] = s.pos
+            active[i] = True
+            temp[i] = s.temperature
+            keys[i] = s.key
+        pt = jnp.asarray(self.pool.page_table)
+
+        def call(cfg):
+            return _generate_step(
+                cfg, self.ctx.mesh, self.pool.page_size, self.params,
+                self.ctx.lut, self.pool.pages, pt, jnp.asarray(tok),
+                jnp.asarray(pos), jnp.asarray(active), jnp.asarray(temp),
+                jnp.asarray(keys))
+
+        pages, nxt = self.guard(call, "decode")
+        self.pool.pages = pages
+        nxt = np.asarray(nxt)
+
+        done: List[Completion] = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            t = int(nxt[i])
+            s.out.append(t)
+            s.pos += 1
+            if len(s.out) >= s.max_new or (s.eos_id is not None
+                                           and t == s.eos_id):
+                reason = ("eos" if s.eos_id is not None and t == s.eos_id
+                          else "max_new")
+                done.append(self._completion(s.rid, s.prompt, s.out,
+                                             reason, s.submitted_step))
+                self.pool.free(i)
+                self._slots[i] = None
+        return done
+
+    def _completion(self, rid, prompt, out, reason, submitted) -> Completion:
+        return Completion(
+            rid=rid, prompt=np.asarray(prompt),
+            tokens=np.concatenate([np.asarray(prompt, np.int32),
+                                   np.asarray(out, np.int32)]),
+            n_generated=len(out), finished=reason,
+            submitted_step=submitted, finished_step=self.steps)

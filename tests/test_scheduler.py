@@ -1,0 +1,354 @@
+"""Continuous-batching engine — slot lifecycle, paging, and parity.
+
+The request-level API's acceptance contract:
+
+  * every request served through ``serve.Engine`` — whenever it arrived,
+    whichever slot it landed in, whoever its co-tenants were — yields
+    tokens **bitwise-equal** to a one-shot ``engine.generate`` of the same
+    prompt at the pool's cache length;
+  * requests join a *running* decode loop (mid-decode admission), finish
+    independently (EOS or budget), and free their slot + pages for queued
+    requests — with no stale KV bleeding across page reuse;
+  * one ``generate_step`` trace serves the whole mixed trace (admissions
+    and completions are traced-value changes, never retraces);
+  * the degradation ladder covers the scheduler's jitted steps via
+    ``ResilientEngine.scheduler()``.
+
+Plus the satellite seams: the ``Impl`` enum as the one home for impl
+strings, and ``ServeContext`` deprecating the loose ``lut=``/``mesh=``
+kwargs.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import CompressionPolicy
+from repro.kernels import ops
+from repro.models import lm as LM
+from repro.serve import engine as engine_mod
+from repro.serve.context import ServeContext
+from repro.serve.engine import build_serve_params, generate
+from repro.serve.kv_cache import PagedKVPool
+from repro.serve.resilience import (FALLBACK_COUNTS, ResiliencePolicy,
+                                    ResilientEngine)
+from repro.serve.scheduler import Engine, Request
+from repro.testing import FaultInjector
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(cfg, ServeState, ctx) for the dense smoke config."""
+    cfg = get_config("llama3.2-1b").smoke
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    st = build_serve_params(
+        params, CompressionPolicy(mode="compressed", min_weight_size=1024))
+    return cfg, st, ServeContext.from_state(cfg, st)
+
+
+def _prompts(cfg, n, seed=100):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size,
+                        int(rng.randint(4, 12))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _ref(st, cfg, ctx, prompt, max_new, max_len):
+    return np.asarray(generate(st.params, cfg, prompt[None, :], ctx=ctx,
+                               max_new=max_new, max_len=max_len))[0]
+
+
+# -- parity ------------------------------------------------------------
+
+def test_single_request_bitwise_parity(served):
+    cfg, st, ctx = served
+    eng = Engine(ctx, st.params, n_slots=2, max_len=24)
+    [p] = _prompts(cfg, 1)
+    eng.submit(Request(tokens=p, max_new=5))
+    comps = eng.drain()
+    assert len(comps) == 1 and comps[0].finished == "max_new"
+    np.testing.assert_array_equal(
+        comps[0].tokens, _ref(st, cfg, ctx, p, 5, eng.pool.max_len))
+
+
+def test_mixed_trace_staggered_arrivals_bitwise_parity(served):
+    """The acceptance bar: 8 overlapping requests, staggered arrivals,
+    varied prompt/decode lengths, 3 slots — every output bitwise-equal to
+    one-shot generate, with occupancy > 1 and mid-decode admissions."""
+    cfg, st, ctx = served
+    eng = Engine(ctx, st.params, n_slots=3, max_len=20)
+    prompts = _prompts(cfg, 8)
+    rng = np.random.RandomState(0)
+    max_news = rng.randint(3, 9, 8)
+    arrivals = np.concatenate([[0], np.cumsum(rng.poisson(1.5, 7))])
+    submitted = 0
+    while submitted < 8 or eng.health()["occupied"] or eng.health()["queued"]:
+        while submitted < 8 and eng.steps >= arrivals[submitted]:
+            eng.submit(Request(tokens=prompts[submitted],
+                               max_new=int(max_news[submitted]),
+                               rid=submitted))
+            submitted += 1
+        eng.step()
+    h = eng.health()
+    assert h["completed"] == 8
+    assert h["occupancy_max"] > 1
+    assert h["joined_mid_decode"] >= 1
+    by_rid = {c.rid: c for c in eng.completions}
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            by_rid[i].tokens,
+            _ref(st, cfg, ctx, p, int(max_news[i]), eng.pool.max_len),
+            err_msg=f"request {i} diverged from one-shot generate")
+
+
+def test_one_trace_serves_the_whole_trace(served):
+    """Admissions/completions are traced-value changes: a full multi-
+    admission drain runs on ONE generate_step trace (and one prefill)."""
+    cfg, st, ctx = served
+    cfgf = dataclasses.replace(cfg, name=cfg.name + "-sched-trace")
+    eng = Engine(ctx.with_cfg(cfgf), st.params, n_slots=2, max_len=20)
+    engine_mod.TRACE_COUNTS.clear()
+    for i, p in enumerate(_prompts(cfg, 4)):
+        eng.submit(Request(tokens=p, max_new=4, rid=i))
+    eng.drain()
+    assert engine_mod.TRACE_COUNTS["generate_step"] == 1, \
+        dict(engine_mod.TRACE_COUNTS)
+    assert len(eng.completions) == 4
+
+
+# -- slot lifecycle ----------------------------------------------------
+
+def test_completion_frees_slot_and_queue_refills(served):
+    """More requests than slots: early finishers free their slot, queued
+    requests join the *running* loop, pages recycle, outputs stay exact."""
+    cfg, st, ctx = served
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16)
+    prompts = _prompts(cfg, 5, seed=7)
+    max_news = [2, 6, 3, 5, 4]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(tokens=p, max_new=max_news[i], rid=i))
+    n_pages0 = len(eng.pool.free_pages)
+    eng.drain()
+    h = eng.health()
+    assert h["completed"] == 5
+    assert h["joined_mid_decode"] >= 1          # refill joined mid-stream
+    assert len(eng.pool.free_pages) == n_pages0  # all pages returned
+    by_rid = {c.rid: c for c in eng.completions}
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            by_rid[i].tokens,
+            _ref(st, cfg, ctx, p, max_news[i], eng.pool.max_len),
+            err_msg=f"request {i}: stale KV after page reuse?")
+
+
+def test_page_reuse_no_stale_kv(served):
+    """Serve the same prompt before and after other tenants churned
+    through the pool's pages (LIFO reuse): outputs must be identical."""
+    cfg, st, ctx = served
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16)
+    [p0, p1, p2] = _prompts(cfg, 3, seed=11)
+    eng.submit(Request(tokens=p0, max_new=5, rid=0))
+    first = eng.drain()[0].tokens
+    # churn: different prompts write different KV into the same pages
+    eng.submit(Request(tokens=p1, max_new=6, rid=1))
+    eng.submit(Request(tokens=p2, max_new=4, rid=2))
+    eng.drain()
+    eng.submit(Request(tokens=p0, max_new=5, rid=3))
+    again = eng.drain()[0].tokens
+    np.testing.assert_array_equal(first, again)
+
+
+def test_eos_stops_early_and_frees_slot(served):
+    """A request whose eos_id matches a mid-stream token finishes early
+    with finished='eos', truncated at (and including) the EOS token."""
+    cfg, st, ctx = served
+    eng = Engine(ctx, st.params, n_slots=2, max_len=24)
+    [p] = _prompts(cfg, 1, seed=3)
+    full = Engine(ctx, st.params, n_slots=1, max_len=24)
+    full.submit(Request(tokens=p, max_new=6))
+    ref = full.drain()[0].tokens
+    gen = ref[len(p):]
+    eos = int(gen[2])                      # a token generated mid-stream
+    eng.submit(Request(tokens=p, max_new=6, eos_id=eos))
+    [c] = eng.drain()
+    assert c.finished == "eos"
+    assert c.n_generated <= 6 and c.tokens[-1] == eos
+    np.testing.assert_array_equal(c.tokens, ref[:len(p) + c.n_generated])
+    assert eng.health()["occupied"] == 0
+    assert len(eng.pool.free_pages) == eng.pool.n_pages
+
+
+def test_sampling_deterministic_per_request(served):
+    """temperature > 0: per-request PRNG (seed folded with absolute
+    position) makes outputs reproducible run to run."""
+    cfg, st, ctx = served
+    outs = []
+    for _ in range(2):
+        eng = Engine(ctx, st.params, n_slots=2, max_len=20)
+        for i, p in enumerate(_prompts(cfg, 2, seed=5)):
+            eng.submit(Request(tokens=p, max_new=5, temperature=0.8,
+                               seed=42 + i, rid=i))
+        eng.drain()
+        outs.append({c.rid: c.tokens for c in eng.completions})
+    for rid in outs[0]:
+        np.testing.assert_array_equal(outs[0][rid], outs[1][rid])
+
+
+def test_submit_validates(served):
+    cfg, st, ctx = served
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(tokens=np.arange(10), max_new=10))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(tokens=np.zeros((0,), np.int32)))
+
+
+# -- cache paging across model families --------------------------------
+
+def test_moe_dropless_parity():
+    """MoE configs page too (stacked + per-layer 'first' caches, MLA
+    latent planes).  Expert-capacity drops depend on batch size, so exact
+    parity needs the dropless regime (capacity_factor >= E / top_k)."""
+    cfg = get_config("deepseek-v2-lite-16b").smoke
+    cfg = dataclasses.replace(cfg, name=cfg.name + "-sched-dropless",
+                              capacity_factor=float(cfg.n_experts)
+                              / cfg.top_k)
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    st = build_serve_params(
+        params, CompressionPolicy(mode="compressed", min_weight_size=1024))
+    ctx = ServeContext.from_state(cfg, st)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16)
+    prompts = _prompts(cfg, 3, seed=9)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(tokens=p, max_new=3, rid=i))
+    eng.drain()
+    assert eng.health()["occupancy_max"] > 1
+    by_rid = {c.rid: c for c in eng.completions}
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(
+            by_rid[i].tokens, _ref(st, cfg, ctx, p, 3, eng.pool.max_len))
+
+
+def test_recurrent_families_rejected():
+    """ssm state has no time axis to page — the pool must refuse loudly
+    at construction, not corrupt state silently."""
+    cfg = get_config("mamba2-2.7b").smoke
+    with pytest.raises(ValueError):
+        PagedKVPool(cfg, 2, 16)
+
+
+# -- resilience composition --------------------------------------------
+
+def test_resilient_scheduler_ladder_on_ingraph_fault(served):
+    """A persistent fused-kernel fault inside the jitted generate_step:
+    the guard walks the ladder, re-traces unfused, and the served outputs
+    equal the clean run's."""
+    cfg, st, _ = served
+    prompts = _prompts(cfg, 2, seed=13)
+
+    def run(cfg_run, inject):
+        reng = ResilientEngine(cfg_run, st,
+                               policy=ResiliencePolicy(max_retries=0))
+        eng = reng.scheduler(n_slots=2, max_len=16)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(tokens=p, max_new=4, rid=i))
+        if inject:
+            with FaultInjector().decode_fault(nth=1):
+                eng.drain()
+        else:
+            eng.drain()
+        return reng, {c.rid: c.tokens for c in eng.completions}
+
+    _, clean = run(dataclasses.replace(cfg, name=cfg.name + "-rs-clean"),
+                   False)
+    reng, faulty = run(dataclasses.replace(cfg, name=cfg.name + "-rs-fault"),
+                       True)
+    assert reng.last_rung == "unfused"
+    assert FALLBACK_COUNTS["unfused"] >= 1
+    for rid in clean:
+        np.testing.assert_array_equal(clean[rid], faulty[rid])
+
+
+# -- sharded serving ---------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (tier1-multidevice CI job)")
+def test_scheduler_sharded_parity_8dev():
+    """2×4 (data, model) mesh: the scheduler's generate_step traces under
+    the mesh — the compressed matmuls take the shard-mapped fused path
+    (dispatch probe) — and serving a request next to a co-tenant is
+    bitwise-identical to serving it alone through the same pool.  (A
+    mesh-less run is NOT the reference: cross-device reduction order
+    changes the bf16 floats, so the invariance is asserted *within* the
+    mesh, where both runs share one trace.)"""
+    from repro.sharding import partition as PT
+    cfg = get_config("llama3.2-1b").smoke
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    st = build_serve_params(
+        params, CompressionPolicy(mode="compressed", min_weight_size=1024),
+        model_shards=4)                    # tiles divide the model axis
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    specs = PT.make_param_specs(st.params, mesh,
+                                PT.ShardingConfig(mode="serve"))
+    sp = jax.device_put(st.params, PT.to_named(specs, mesh))
+    lut = jax.device_put(
+        st.lut, jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+    prompts = _prompts(cfg, 2, seed=17)
+
+    cfgm = dataclasses.replace(cfg, name=cfg.name + "-sched-mesh")
+    ctxm = ServeContext(cfg=cfgm, mesh=mesh, lut=lut)
+    with mesh, PT.active_mesh(mesh):
+        ops.DISPATCH_COUNTS.clear()
+        solo = {}
+        for i, p in enumerate(prompts):
+            eng = Engine(ctxm, sp, n_slots=2, max_len=16)
+            eng.submit(Request(tokens=p, max_new=4, rid=i))
+            eng.drain()
+            solo[i] = eng.completions[0].tokens
+        assert any(k.endswith("fused_shard_map")
+                   for k in ops.DISPATCH_COUNTS), dict(ops.DISPATCH_COUNTS)
+        eng = Engine(ctxm, sp, n_slots=2, max_len=16)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(tokens=p, max_new=4, rid=i))
+        eng.drain()
+    both = {c.rid: c.tokens for c in eng.completions}
+    for i in range(2):
+        np.testing.assert_array_equal(
+            solo[i], both[i],
+            err_msg=f"request {i} changed under co-tenancy on the mesh")
+
+
+# -- satellite seams ---------------------------------------------------
+
+def test_impl_enum_is_the_one_home():
+    assert ops.Impl("unfused") is ops.Impl.UNFUSED
+    assert ops.Impl.UNFUSED.value == "unfused"
+    assert str(ops.Impl.UNFUSED) == "unfused"          # f-string safe
+    assert f"x+{ops.Impl.MATERIALIZE}" == "x+materialize"
+    assert ops.VALID_IMPLS == frozenset(i.value for i in ops.Impl)
+    assert ops.DEFAULT_LADDER == ResiliencePolicy().ladder
+    prev = ops._DEFAULT_IMPL
+    try:
+        ops.set_default_impl(ops.Impl.REF)
+        assert ops._DEFAULT_IMPL == "ref"
+        with pytest.raises(ValueError):
+            ops.set_default_impl("warp-speed")
+    finally:
+        ops.set_default_impl(prev)
+    from repro import kernels
+    assert kernels.Impl is ops.Impl
+
+
+def test_serve_context_deprecates_loose_kwargs(served):
+    cfg, st, ctx = served
+    toks = jnp.asarray(_prompts(cfg, 1, seed=19)[0][None, :])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        via_ctx = generate(st.params, cfg, toks, ctx=ctx, max_new=3)
+    with pytest.warns(DeprecationWarning, match="ServeContext"):
+        via_kw = generate(st.params, cfg, toks, lut=st.lut, max_new=3)
+    np.testing.assert_array_equal(np.asarray(via_ctx), np.asarray(via_kw))
