@@ -15,8 +15,15 @@ Two questions an operator needs numbers for before turning the knobs on:
     (jit caches key on the config), i.e. exactly how ``ResilientEngine``
     re-traces a fallback.
 
-``resilience_json`` bundles both into ``BENCH_resilience.json`` for the
-CI artifact trail.
+A third, on the request level: **what does quarantining a poisoned
+request cost its batch-mates?** ``quarantine_recovery`` serves the same
+3-request trace clean and with one slot poisoned
+(``FaultInjector.slot_fault``), and reports the drain-time ratio — the
+price of the bisect replays plus the survivors' resume re-prefills —
+alongside the exactly-one-refused accounting.
+
+``resilience_json`` bundles all of it into ``BENCH_resilience.json`` for
+the CI artifact trail.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import dataclasses
 import json
 import time
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -34,6 +42,8 @@ from repro.kernels import ops
 from repro.serve.context import ServeContext
 from repro.serve.engine import build_serve_params, generate
 from repro.serve.resilience import ResiliencePolicy
+from repro.serve.scheduler import Engine, Request
+from repro.testing import FaultInjector
 
 from .common import emit, trained_tiny_model
 
@@ -136,12 +146,70 @@ def ladder_generate(rows: list | None = None):
                              dispatch=disp))
 
 
+def quarantine_recovery(rows: list | None = None, *, seed: int = 0):
+    """Drain-time cost of quarantining one poisoned request out of a
+    3-request batch, vs the same trace served clean.
+
+    The poisoned run pays the bisect's masked replays (reusing the jitted
+    step — no retrace) plus the survivors' resume re-prefills; the clean
+    run is the baseline.  Survivor outputs must be bitwise-identical
+    across the two runs — the quarantine may cost time, never tokens."""
+    cfg, params, _ = trained_tiny_model(steps=20)
+    st = build_serve_params(params, CompressionPolicy(
+        mode="compressed", min_weight_size=1024))
+    ctx = ServeContext.from_state(cfg, st)
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in rng.randint(4, 7, 3)]
+
+    def run(poison: bool):
+        eng = Engine(ctx, st.params, n_slots=3, max_len=16, page_size=8)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(tokens=p, max_new=6, rid=i))
+        t0 = time.perf_counter()
+        if poison:
+            # arm only until the quarantine fires so the slot's next
+            # occupant (a resumed survivor) decodes clean
+            with FaultInjector(seed).slot_fault(slot=1, nth=1):
+                while not any(c.finished == "refused"
+                              for c in eng.completions):
+                    eng.step()
+        eng.drain()
+        jax.block_until_ready(eng.pool.pages)
+        return time.perf_counter() - t0, eng
+
+    run(False)                          # warm the traces
+    t_clean, eng_clean = run(False)
+    t_poison, eng_poison = run(True)
+
+    refused = [c for c in eng_poison.completions if c.finished == "refused"]
+    assert len(refused) == 1, [c.finished for c in eng_poison.completions]
+    clean_by_rid = {c.rid: c for c in eng_clean.completions}
+    survivors_ok = all(
+        np.array_equal(c.tokens, clean_by_rid[c.rid].tokens)
+        for c in eng_poison.completions if c.finished != "refused")
+    assert survivors_ok, "survivor tokens diverged from the clean run"
+
+    ratio = t_poison / t_clean
+    emit("resilience.quarantine_drain_s", f"{t_poison:.4f}",
+         f"{ratio:.2f}x clean drain ({t_clean:.4f}s), 1 of 3 refused")
+    if rows is not None:
+        rows.append(dict(bench="quarantine_recovery", n_requests=3,
+                         refused=len(refused), clean_s=t_clean,
+                         poisoned_s=t_poison, poisoned_over_clean=ratio,
+                         survivor_parity_ok=bool(survivors_ok),
+                         resumes=max(c.resumed
+                                     for c in eng_poison.completions)))
+    return ratio
+
+
 def resilience_json(path: str = "BENCH_resilience.json"):
     """Machine-readable resilience artifact: verify overhead vs model
-    bytes + per-rung generate throughput."""
+    bytes + per-rung generate throughput + quarantine recovery cost."""
     rows: list = []
     full_over_pack = verify_overhead(rows)
     ladder_generate(rows)
+    quarantine_recovery(rows)
     payload = {"schema": 1, "bench": "resilience",
                "backend": jax.default_backend(),
                "host_devices": jax.device_count(),

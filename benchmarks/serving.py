@@ -16,7 +16,16 @@ express.  Measured per trace:
     ``generate`` of the same prompt at the pool's cache length (the
     correctness bar; asserted, not just reported).
 
-``serving_json`` bundles it into ``BENCH_serving.json`` for the CI
+``overload_trace`` is the overload/fault smoke: a bounded queue that
+sheds, TTLs that expire, a high-priority arrival that preempts an
+in-flight request off an overcommitted page pool, and a poisoned request
+that is quarantined by bisection — the whole trace must *drain without
+raising*, every submitted request accounted for by an explicit
+completion reason, the counts mirrored in ``FALLBACK_COUNTS``, and every
+ordinary finisher (including the preempted-then-resumed one) still
+bitwise-equal to one-shot ``generate``.
+
+``serving_json`` bundles both into ``BENCH_serving.json`` for the CI
 artifact trail (see the serving-smoke job).
 """
 from __future__ import annotations
@@ -30,7 +39,9 @@ import jax
 from repro.core.policy import CompressionPolicy
 from repro.serve.context import ServeContext
 from repro.serve.engine import build_serve_params, generate
+from repro.serve.resilience import FALLBACK_COUNTS
 from repro.serve.scheduler import Engine, Request
+from repro.testing import FaultInjector
 
 from .common import emit, trained_tiny_model
 
@@ -57,7 +68,7 @@ def serve_trace(rows: list | None = None, *, arch: str = "llama3.2-1b",
     eng.drain()
     eng.steps = 0
     eng.completions.clear()
-    eng.stats = {"admitted": 0, "joined_mid_decode": 0, "occupancy": []}
+    eng.reset_stats()
 
     submit_wall = {}
     t0 = time.perf_counter()
@@ -117,6 +128,111 @@ def serve_trace(rows: list | None = None, *, arch: str = "llama3.2-1b",
     return summary
 
 
+def overload_trace(rows: list | None = None, *, arch: str = "llama3.2-1b",
+                   seed: int = 0):
+    """Overload + fault smoke: the request-level robustness layer end to
+    end, on a deterministic trace.
+
+    Phase 1 runs an *overcommitted* engine (4 pages back only 2 of 3
+    slots) with a bounded queue: one submission sheds, one queued request
+    TTL-expires, and a priority-1 arrival preempts the youngest in-flight
+    request off its pages — which later resumes and must still match
+    one-shot ``generate`` bitwise.  Phase 2 poisons one slot of a healthy
+    3-request batch via ``FaultInjector.slot_fault``: exactly one request
+    is refused by the quarantine bisect, the survivors resume and finish
+    bitwise-clean.  The whole trace must drain without raising, with every
+    lifecycle event mirrored in ``FALLBACK_COUNTS``.
+    """
+    cfg, params, _ = trained_tiny_model(arch, steps=20, seed=seed)
+    st = build_serve_params(params, CompressionPolicy(
+        mode="compressed", min_weight_size=1024))
+    ctx = ServeContext.from_state(cfg, st)
+    rng = np.random.RandomState(seed + 1)
+    prompts = [rng.randint(0, cfg.vocab_size, int(n)).astype(np.int32)
+               for n in rng.randint(4, 7, 9)]
+    base = {k: FALLBACK_COUNTS[k]
+            for k in ("shed", "expired", "preempt", "quarantine")}
+
+    def check_parity(eng, rid, prompt, max_new):
+        c = next(c for c in eng.completions if c.rid == rid)
+        ref = np.asarray(generate(st.params, cfg, prompt[None, :], ctx=ctx,
+                                  max_new=max_new,
+                                  max_len=eng.pool.max_len))[0]
+        return bool(np.array_equal(ref, c.tokens))
+
+    # -- phase 1: shed / expire / preempt on an overcommitted pool ------
+    # page_size=8, max_len=16 -> pages_per_slot=2; n_pages=4 backs only
+    # 2 of the 3 slots, so "free slot" never implies "free pages".
+    eng = Engine(ctx, st.params, n_slots=3, max_len=16, page_size=8,
+                 n_pages=4, max_queue=2, shed_policy="reject-new")
+    long_new = 16 - len(prompts[0])        # outlasts the whole trace
+    eng.submit(Request(tokens=prompts[0], max_new=long_new, rid=0))
+    eng.submit(Request(tokens=prompts[1], max_new=3, rid=1))
+    eng.step()                      # r0+r1 admitted; pool now exhausted
+    eng.submit(Request(tokens=prompts[2], max_new=4, rid=2, ttl_steps=2))
+    eng.submit(Request(tokens=prompts[3], max_new=4, rid=3))
+    eng.submit(Request(tokens=prompts[4], max_new=4, rid=4))  # full -> shed
+    while not any(c.rid == 1 for c in eng.completions):
+        eng.step()                  # r1 finishes, releasing its pages
+    eng.step()                      # r2 takes them; it TTL-expires soon
+    eng.submit(Request(tokens=prompts[5], max_new=4, rid=5, priority=1))
+    eng.drain()                     # r5 preempts the youngest; victim resumes
+    h1 = eng.health()
+    by_reason = {c.rid: c.finished for c in eng.completions}
+    assert by_reason[4] == "shed", by_reason
+    assert by_reason[2] == "deadline", by_reason
+    assert h1["preempted"] >= 1 and h1["resumed"] >= 1, h1
+    resumed_max = max(c.resumed for c in eng.completions)
+    parity_ok = all(
+        check_parity(eng, r, prompts[r], m)
+        for r, m in [(0, long_new), (1, 3), (3, 4), (5, 4)])
+
+    # -- phase 2: poisoned-request quarantine on a healthy pool ---------
+    eng2 = Engine(ctx, st.params, n_slots=3, max_len=16, page_size=8)
+    for i in range(3):
+        eng2.submit(Request(tokens=prompts[6 + i], max_new=6, rid=10 + i))
+    inj = FaultInjector(seed)
+    # arm only until the quarantine fires, so the slot's next occupant
+    # (a resumed survivor) decodes clean
+    with inj.slot_fault(slot=1, nth=1):
+        while not any(c.finished == "refused" for c in eng2.completions):
+            eng2.step()
+    eng2.drain()
+    h2 = eng2.health()
+    refused = [c for c in eng2.completions if c.finished == "refused"]
+    assert len(refused) == 1, [c.finished for c in eng2.completions]
+    survivors = [c for c in eng2.completions if c.finished != "refused"]
+    assert len(survivors) == 2 and all(c.resumed >= 1 for c in survivors)
+    parity_ok &= all(
+        check_parity(eng2, 10 + i, prompts[6 + i], 6)
+        for i in range(3) if 10 + i != refused[0].rid)
+
+    delta = {k: FALLBACK_COUNTS[k] - base[k] for k in base}
+    assert delta["shed"] >= 1 and delta["expired"] >= 1, delta
+    assert delta["preempt"] >= 1 and delta["quarantine"] >= 1, delta
+    assert parity_ok, "resumed/survivor output diverged from generate"
+
+    summary = dict(
+        bench="overload_trace", arch=arch, seed=seed,
+        queue_peak=h1["queue_peak"], shed=h1["shed"],
+        shed_rate=h1["shed"] / 6.0, expired=h1["expired"],
+        preempted=h1["preempted"], resumed=h1["resumed"],
+        max_resumes=resumed_max, quarantined=h2["quarantined"],
+        refused=len(refused), survivor_parity_ok=parity_ok,
+        fallback_delta=delta, steps_overload=h1["steps"],
+        steps_quarantine=h2["steps"])
+    emit("serving.overload_queue_peak", str(summary["queue_peak"]),
+         f"shed={summary['shed']} expired={summary['expired']} "
+         f"preempted={summary['preempted']}")
+    emit("serving.overload_shed_rate", f"{summary['shed_rate']:.2f}",
+         "reject-new, max_queue=2")
+    emit("serving.quarantine_refused", str(summary["refused"]),
+         f"survivors resumed clean, parity_ok={parity_ok}")
+    if rows is not None:
+        rows.append(summary)
+    return summary
+
+
 def serving_json(path: str = "BENCH_serving.json", *,
                  arch: str = "llama3.2-1b", n_requests: int = 8,
                  n_slots: int = 3, seed: int = 0):
@@ -124,6 +240,7 @@ def serving_json(path: str = "BENCH_serving.json", *,
     rows: list = []
     serve_trace(rows, arch=arch, n_requests=n_requests, n_slots=n_slots,
                 seed=seed)
+    overload_trace(rows, arch=arch, seed=seed)
     payload = {"schema": 1, "bench": "serving",
                "backend": jax.default_backend(),
                "host_devices": jax.device_count(),

@@ -8,7 +8,12 @@ a ``serve.Request`` with staggered arrivals (``--stagger`` engine steps
 apart), served by the continuous-batching ``serve.Engine`` over a paged
 KV pool of ``--slots`` decode slots — requests join and leave the running
 decode loop per tick, and the occupancy/throughput summary printed at the
-end shows the overlap.  With compression on, the engine comes from
+end shows the overlap.  Overload knobs: ``--max-queue`` bounds the
+admission queue (overflow sheds per ``--shed-policy``) and
+``--request-ttl`` expires requests that wait or run too long — overload
+always surfaces as accounted-for completions ('shed'/'deadline'), and the
+queue-peak/shed/preempt/quarantine counters print with the summary.  With
+compression on, the engine comes from
 ``ResilientEngine.scheduler()``: every jitted prefill/decode step walks
 the retry/degradation ladder and the health snapshot is printed.
 
@@ -75,6 +80,17 @@ def main():
     ap.add_argument("--stagger", type=int, default=2,
                     help="engine steps between request arrivals "
                          "(0 = all at once)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: overflow sheds a "
+                         "request per --shed-policy as a "
+                         "Completion(finished='shed') (default: unbounded)")
+    ap.add_argument("--shed-policy", default="reject-new",
+                    choices=["reject-new", "drop-oldest"],
+                    help="who sheds when the bounded queue overflows")
+    ap.add_argument("--request-ttl", type=int, default=None,
+                    help="engine-wide TTL in engine steps from submit; "
+                         "expired requests complete with "
+                         "finished='deadline' (default: no TTL)")
     ap.add_argument("--mesh", default=None,
                     help="DATA,MODEL mesh shape for sharded serving")
     ap.add_argument("--tiles", type=int, default=0,
@@ -128,12 +144,17 @@ def main():
             print(rengine.verify_report.summary())
             print(rengine.invariant_report.summary())
         eng = rengine.scheduler(n_slots=args.slots, max_len=max_len,
-                                page_size=args.page_size)
+                                page_size=args.page_size,
+                                max_queue=args.max_queue,
+                                shed_policy=args.shed_policy,
+                                request_ttl=args.request_ttl)
     else:
         rengine = None
         eng = Engine(ServeContext(cfg=cfg, mesh=mesh, lut=lut), sp,
                      n_slots=args.slots, max_len=max_len,
-                     page_size=args.page_size)
+                     page_size=args.page_size, max_queue=args.max_queue,
+                     shed_policy=args.shed_policy,
+                     request_ttl=args.request_ttl)
 
     toks = np.asarray(data.batch_at(0)["tokens"])
     arrivals = [i * args.stagger for i in range(args.batch)]
@@ -158,6 +179,13 @@ def main():
     print(f"occupancy: mean {h['occupancy_mean']:.2f} "
           f"max {h['occupancy_max']} of {args.slots} slots; "
           f"joined mid-decode: {h['joined_mid_decode']}")
+    print(f"overload: queue_peak {h['queue_peak']} shed {h['shed']} "
+          f"expired {h['expired']} preempted {h['preempted']} "
+          f"quarantined {h['quarantined']} resumed {h['resumed']}")
+    reasons = {}
+    for c in eng.completions:
+        reasons[c.finished] = reasons.get(c.finished, 0) + 1
+    print("completions by reason:", reasons)
     if args.mode == "compressed":
         print("matmul dispatch:", dict(ops.DISPATCH_COUNTS))
     if rengine is not None:

@@ -31,6 +31,13 @@ into a contiguous-looking cache view of length ``max_len``:
 Pages are fungible across slots: ``alloc`` hands out whatever is on the
 free list (LIFO, so reuse is immediate and the stale-KV tests actually
 exercise cross-request reuse), ``free`` returns a completed slot's pages.
+
+The pool can be *overcommitted*: ``n_pages`` may be smaller than
+``n_slots * pages_per_slot``, in which case a free slot is not a
+guarantee of free pages — ``alloc`` raises ``PoolExhausted`` (and
+``can_alloc`` reports False) when the free list cannot back another
+slot.  The scheduler turns that pressure into preemption/shedding
+instead of letting admits fail (see serve/scheduler.py).
 """
 from __future__ import annotations
 
@@ -42,6 +49,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import lm as LM
+
+
+class PoolError(RuntimeError):
+    """Slot-ownership invariant violated (double alloc, bad slot id).
+
+    A real exception — not an ``assert`` — because the ownership invariant
+    guards page aliasing between live requests and must hold under
+    ``python -O`` too."""
+
+
+class PoolExhausted(PoolError):
+    """The free list cannot back another slot's ``pages_per_slot`` pages.
+
+    Raised by ``alloc`` under page pressure (overcommitted pools, or
+    injected via ``FaultInjector.alloc_failure``); the scheduler's
+    admission path catches it and preempts/queues instead of crashing."""
 
 
 def _is_axes(x) -> bool:
@@ -135,31 +158,48 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg, n_slots: int, max_len: int, *,
-                 page_size: int = 8, dtype=jnp.bfloat16):
+                 page_size: int = 8, dtype=jnp.bfloat16,
+                 n_pages: int | None = None):
         _axes_leaves(cfg)             # fail fast on unsupported families
         self.cfg = cfg
         self.n_slots = n_slots
         self.page_size = page_size
         self.pages_per_slot = -(-max_len // page_size)
         self.max_len = self.pages_per_slot * page_size
-        self.n_pages = n_slots * self.pages_per_slot
+        # n_pages < n_slots * pages_per_slot overcommits the pool: slots
+        # can be free while pages are not (the page-pressure regime).
+        self.n_pages = (n_slots * self.pages_per_slot if n_pages is None
+                        else n_pages)
+        if self.n_pages < self.pages_per_slot:
+            raise ValueError(
+                f"n_pages ({self.n_pages}) cannot back even one slot "
+                f"({self.pages_per_slot} pages/slot)")
         self.pages = LM.init_caches(cfg, self.n_pages, page_size, dtype)
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self.free_pages: List[int] = list(range(self.n_pages))
         self._owned = [False] * n_slots
 
+    def can_alloc(self) -> bool:
+        """Whether the free list can back another slot right now."""
+        return len(self.free_pages) >= self.pages_per_slot
+
     def alloc(self, slot: int) -> np.ndarray:
         """Claim ``pages_per_slot`` pages for ``slot`` (LIFO reuse)."""
-        assert not self._owned[slot], f"slot {slot} already owns pages"
+        if self._owned[slot]:
+            raise PoolError(f"slot {slot} already owns pages")
         if len(self.free_pages) < self.pages_per_slot:
-            raise RuntimeError("page pool exhausted")
+            raise PoolExhausted(
+                f"page pool exhausted: {len(self.free_pages)} free of "
+                f"{self.n_pages}, need {self.pages_per_slot}")
         row = [self.free_pages.pop() for _ in range(self.pages_per_slot)]
         self.page_table[slot] = row
         self._owned[slot] = True
         return self.page_table[slot]
 
     def free(self, slot: int) -> None:
-        """Return ``slot``'s pages to the free list."""
+        """Return ``slot``'s pages to the free list.  Freeing a slot that
+        owns nothing is a safe no-op: the retire, quarantine, and preempt
+        paths may each try to release the same slot."""
         if self._owned[slot]:
             self.free_pages.extend(int(p) for p in self.page_table[slot])
             self._owned[slot] = False

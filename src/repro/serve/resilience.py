@@ -35,6 +35,15 @@ The same machinery covers the continuous-batching path:
 jitted prefill and ``generate_step`` calls each walk the ladder through
 the ``_guard`` hook — one faulty decode tick degrades (and re-traces)
 without tearing down the whole serving loop or its co-tenant requests.
+When even the ladder's last rung fails for a batched tick (a *poisoned
+request*, not a broken kernel), the scheduler takes over: it bisects the
+active slots with masked replays of the same jitted step, refuses only
+the culprit (``ServeRefused`` semantics at request granularity,
+``FALLBACK_COUNTS['quarantine']``), and requeues the healthy survivors —
+the guard's ``kind`` is 'replay' for those probes.  Overload events the
+scheduler accounts for (shed / expired / preempt) tick the same counter,
+so ``health()['fallbacks']`` is the one place CI asserts the whole
+robustness matrix.
 """
 from __future__ import annotations
 
@@ -54,7 +63,12 @@ from repro.serve import engine as _engine
 # when the ladder *falls back* onto that rung; 'retry:<rung>' per bounded
 # in-rung retry; 'deadline' on expiry; 'refused' when the ladder is
 # exhausted; 'integrity_refused' when the verify gate quarantines the
-# artifact.  Reset between tests by the autouse conftest fixture.
+# artifact.  The request-level scheduler (serve/scheduler.py) ticks its
+# own lifecycle events here too so one counter tells the whole
+# degradation story: 'quarantine' per poisoned request refused out of a
+# batch, 'preempt' per in-flight request evicted under page pressure,
+# 'shed' per request shed by the bounded queue, 'expired' per TTL /
+# deadline expiry.  Reset between tests by the autouse conftest fixture.
 FALLBACK_COUNTS = collections.Counter()
 
 # Ladder rung -> the ops session impl that forces it.  'fused' serves with
@@ -247,9 +261,12 @@ class ResilientEngine:
 
     def _guard(self, call, kind: str):
         """Scheduler guard hook: run one jitted engine call (``call(cfg)``,
-        kind 'prefill'|'decode') under the retry/deadline/ladder walk.
-        Each rung substitutes its suffixed config, so a broken fused
-        generate_step re-traces unfused instead of reusing the bad trace."""
+        kind 'prefill'|'decode'|'replay') under the retry/deadline/ladder
+        walk.  Each rung substitutes its suffixed config, so a broken fused
+        generate_step re-traces unfused instead of reusing the bad trace.
+        'replay' calls are the quarantine bisect's masked sub-batch probes:
+        they walk the same ladder, so a probe only reports a subset faulty
+        when no rung can serve it — exactly the culprit criterion."""
         return self._with_ladder(
             lambda rung: (lambda: call(self._rung_cfg(rung))),
             deadline_s=None)

@@ -1,4 +1,4 @@
 """Test-support utilities importable by tests, benchmarks, and CI jobs."""
-from .faults import FaultInjector
+from .faults import FaultInjector, FaultProbe
 
-__all__ = ["FaultInjector"]
+__all__ = ["FaultInjector", "FaultProbe"]

@@ -23,6 +23,15 @@ actually sees:
     skips traces where the session impl lever pins a fallback rung
     ('unfused'/'materialize'), modelling "the fused path is broken, the
     fallback paths are not".
+  * **Scheduler faults** — the request-level families driving the
+    continuous-batching robustness matrix (serve/scheduler.py).
+    ``slot_fault(slot, nth)`` is the *poisoned-request* model: the
+    scheduler's decode step raises whenever the target slot is active
+    (from its nth such call), on every ladder rung — the fault follows
+    the request, not the kernel, so only quarantine-by-bisection can
+    isolate it.  ``alloc_failure(times)`` injects page-pool exhaustion
+    at the KV-pool alloc seam, driving the preempt/requeue path without
+    having to construct an overcommitted pool.
 
 Seeded via ``REPRO_FAULT_SEED`` (CI's fault-injection job varies it) so
 bit positions differ across runs without losing reproducibility.
@@ -42,6 +51,18 @@ import numpy as np
 
 def _default_seed() -> int:
     return int(os.environ.get("REPRO_FAULT_SEED", "0"))
+
+
+class FaultProbe:
+    """Execution-count handle yielded by the injection context managers.
+
+    ``executions`` is the number of guarded calls observed so far; tests
+    use a never-firing probe (``nth`` huge) on a clean run to calibrate a
+    fault-at-step-N injection for a later faulty run of the same trace.
+    """
+
+    def __init__(self):
+        self.executions = 0
 
 
 class FaultInjector:
@@ -160,9 +181,11 @@ class FaultInjector:
 
         orig = ops.decode_dequant_matmul
         count = itertools.count(1)
+        probe = FaultProbe()
 
         def host_tick():
             n = next(count)
+            probe.executions = n
             if nth <= n < nth + times:
                 raise RuntimeError(f"{message} (execution {n})")
             return np.int32(0)
@@ -185,7 +208,7 @@ class FaultInjector:
 
         ops.decode_dequant_matmul = wrapped
         try:
-            yield
+            yield probe
         finally:
             ops.decode_dequant_matmul = orig
             # Drain the poisoned ordered-effects token: the injected raise
@@ -198,3 +221,95 @@ class FaultInjector:
             except Exception:
                 pass
             _dispatch.runtime_tokens.clear()
+
+    # -- scheduler faults ----------------------------------------------
+    @contextlib.contextmanager
+    def slot_fault(self, slot: int, nth: int = 1, times: int = 1 << 30,
+                   message: str = "injected poisoned-request fault"):
+        """Arm a poisoned-request fault against one decode slot.
+
+        Patches ``serve.scheduler._generate_step`` with a wrapper that
+        raises ``JaxRuntimeError`` whenever the target ``slot`` is active
+        in the step's mask — from the ``nth`` such call, for ``times``
+        calls.  The fault *follows the request*: it fires on every
+        degradation-ladder rung (unlike :meth:`decode_fault`, which spares
+        the fallback impls), so the ladder cannot recover and the
+        scheduler's quarantine bisect is the only way out.  The bisect's
+        masked replays see the same wrapper — sub-batches that exclude the
+        slot run clean, the culprit singleton keeps faulting — which is
+        exactly the group-testing signal the bisection needs.  Yields a
+        :class:`FaultProbe` counting the slot's guarded calls
+        (fault-at-step-N: pick ``nth`` > 1 to poison a request only after
+        it has decoded N-1 healthy steps mid-batch).
+        """
+        from repro.serve import scheduler as _sched
+
+        orig = _sched._generate_step
+        count = itertools.count(1)
+        probe = FaultProbe()
+
+        def wrapped(cfg, mesh, page_size, params, lut, pages, page_table,
+                    tok, pos, active, temp, keys):
+            if bool(np.asarray(active)[slot]):
+                n = next(count)
+                probe.executions = n
+                if nth <= n < nth + times:
+                    raise jax.errors.JaxRuntimeError(
+                        f"{message} (slot {slot}, active call {n})")
+            return orig(cfg, mesh, page_size, params, lut, pages,
+                        page_table, tok, pos, active, temp, keys)
+
+        _sched._generate_step = wrapped
+        try:
+            yield probe
+        finally:
+            _sched._generate_step = orig
+
+    @contextlib.contextmanager
+    def alloc_failure(self, times: int = 1, seam: str = "can_alloc"):
+        """Inject page-pool exhaustion for the next ``times`` admissions.
+
+        seam='can_alloc' (default) makes ``PagedKVPool.can_alloc`` report
+        False — the scheduler sees pressure *before* prefilling and walks
+        its preempt-or-wait path.  seam='alloc' leaves ``can_alloc``
+        truthful but makes ``alloc`` itself raise ``PoolExhausted`` — the
+        post-prefill requeue path (a raced reclaim).  Yields a
+        :class:`FaultProbe` counting the injected failures.
+        """
+        if seam not in ("can_alloc", "alloc"):
+            raise ValueError(f"seam must be 'can_alloc' or 'alloc', "
+                             f"got {seam!r}")
+        from repro.serve import kv_cache as _kv
+
+        probe = FaultProbe()
+        counter = itertools.count()
+        if seam == "can_alloc":
+            orig = _kv.PagedKVPool.can_alloc
+
+            def fake_can_alloc(pool):
+                if next(counter) < times:
+                    probe.executions += 1
+                    return False
+                return orig(pool)
+
+            _kv.PagedKVPool.can_alloc = fake_can_alloc
+            try:
+                yield probe
+            finally:
+                _kv.PagedKVPool.can_alloc = orig
+        else:
+            orig = _kv.PagedKVPool.alloc
+
+            def fake_alloc(pool, slot):
+                if next(counter) < times:
+                    probe.executions += 1
+                    raise _kv.PoolExhausted(
+                        f"injected alloc failure ({probe.executions} of "
+                        f"{times})")
+                return orig(pool, slot)
+
+            _kv.PagedKVPool.alloc = fake_alloc
+            try:
+                yield probe
+            finally:
+                _kv.PagedKVPool.alloc = orig

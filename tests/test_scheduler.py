@@ -14,6 +14,18 @@ The request-level API's acceptance contract:
   * the degradation ladder covers the scheduler's jitted steps via
     ``ResilientEngine.scheduler()``.
 
+The request-level robustness layer rides the same contract:
+
+  * overload is *accounted*, never unbounded: a full bounded queue sheds
+    per policy, TTL'd requests expire queued or in-flight — always as
+    completions with explicit reasons;
+  * a poisoned request is quarantined alone: the bisect isolates exactly
+    one culprit from a mixed batch (reusing the existing trace), and the
+    survivors — like preempted-then-resumed victims — finish bitwise-equal
+    to an uninterrupted run;
+  * page pressure (overcommitted ``n_pages``, injected alloc failure)
+    preempts strictly-lower-priority work, never deadlocks admission.
+
 Plus the satellite seams: the ``Impl`` enum as the one home for impl
 strings, and ``ServeContext`` deprecating the loose ``lut=``/``mesh=``
 kwargs.
@@ -33,7 +45,7 @@ from repro.models import lm as LM
 from repro.serve import engine as engine_mod
 from repro.serve.context import ServeContext
 from repro.serve.engine import build_serve_params, generate
-from repro.serve.kv_cache import PagedKVPool
+from repro.serve.kv_cache import PagedKVPool, PoolError, PoolExhausted
 from repro.serve.resilience import (FALLBACK_COUNTS, ResiliencePolicy,
                                     ResilientEngine)
 from repro.serve.scheduler import Engine, Request
@@ -267,6 +279,261 @@ def test_resilient_scheduler_ladder_on_ingraph_fault(served):
                    False)
     reng, faulty = run(dataclasses.replace(cfg, name=cfg.name + "-rs-fault"),
                        True)
+    assert reng.last_rung == "unfused"
+    assert FALLBACK_COUNTS["unfused"] >= 1
+    for rid in clean:
+        np.testing.assert_array_equal(clean[rid], faulty[rid])
+
+
+# -- admission control (overload is accounted, never unbounded) --------
+
+def test_bounded_queue_sheds_per_policy(served):
+    cfg, st, ctx = served
+    [p] = _prompts(cfg, 1, seed=23)
+    # reject-new: the overflowing submission sheds
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16, max_queue=1)
+    r0 = eng.submit(Request(tokens=p, max_new=1))
+    r1 = eng.submit(Request(tokens=p, max_new=1))
+    assert [c.rid for c in eng.completions] == [r1]
+    assert eng.completions[0].finished == "shed"
+    assert eng.completions[0].n_generated == 0
+    assert eng.health()["queued"] == 1 and eng.health()["shed"] == 1
+    # drop-oldest: the queue head sheds, the new submission queues
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16, max_queue=1,
+                 shed_policy="drop-oldest")
+    r0 = eng.submit(Request(tokens=p, max_new=1))
+    r1 = eng.submit(Request(tokens=p, max_new=1))
+    assert [c.rid for c in eng.completions] == [r0]
+    assert eng.completions[0].finished == "shed"
+    assert [q.req.rid for q in eng._queue] == [r1]
+    assert FALLBACK_COUNTS["shed"] == 2
+    with pytest.raises(ValueError, match="shed_policy"):
+        Engine(ctx, st.params, shed_policy="drop-newest")
+
+
+def test_request_ttl_expires_queued_and_inflight(served):
+    cfg, st, ctx = served
+    p = _prompts(cfg, 1, seed=25)[0][:6]
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16)
+    eng.submit(Request(tokens=p, max_new=4, rid=0))
+    eng.submit(Request(tokens=p, max_new=4, rid=1, ttl_steps=1))
+    eng.step()                    # r0 takes the only slot; r1 queued
+    eng.step()                    # r1's TTL passes while queued
+    by_rid = {c.rid: c for c in eng.completions}
+    assert by_rid[1].finished == "deadline" and by_rid[1].n_generated == 0
+    eng.drain()
+    # in-flight expiry: admitted, decodes, then retired mid-stream with
+    # its partial output
+    eng.submit(Request(tokens=p, max_new=10, rid=2, ttl_steps=3))
+    eng.drain()
+    c = {c.rid: c for c in eng.completions}[2]
+    assert c.finished == "deadline"
+    assert 0 < c.n_generated < 10
+    np.testing.assert_array_equal(c.tokens[:len(p)], p)
+    # engine-wide default TTL applies to requests that don't carry one
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16, request_ttl=0)
+    eng.submit(Request(tokens=p, max_new=4, rid=3))
+    eng.step()
+    assert eng.completions[0].finished == "deadline"
+    assert FALLBACK_COUNTS["expired"] == 3
+
+
+def test_rid_collision_rejected(served):
+    cfg, st, ctx = served
+    [p] = _prompts(cfg, 1, seed=27)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16)
+    eng.submit(Request(tokens=p, max_new=1, rid=7))
+    with pytest.raises(ValueError, match="rid 7 already in flight"):
+        eng.submit(Request(tokens=p, max_new=1, rid=7))
+    # auto-assigned rids stay ahead of caller-supplied ones
+    assert eng.submit(Request(tokens=p, max_new=1)) == 8
+    eng.drain()
+    # a finished rid is no longer live and may be reused
+    assert eng.submit(Request(tokens=p, max_new=1, rid=7)) == 7
+    eng.drain()
+
+
+# -- preemption + page pressure ----------------------------------------
+
+def test_preempt_under_page_pressure_resumes_bitwise(served):
+    """Overcommitted pool (2 pages back 1 of 2 slots): a priority-1
+    arrival evicts the in-flight priority-0 request, which later resumes
+    and still matches one-shot generate bitwise."""
+    cfg, st, ctx = served
+    p0 = _prompts(cfg, 1, seed=29)[0][:6]
+    p1 = _prompts(cfg, 1, seed=31)[0][:6]
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, page_size=8,
+                 n_pages=2)
+    eng.submit(Request(tokens=p0, max_new=8, rid=0))
+    eng.step()                                  # r0 holds the only pages
+    eng.submit(Request(tokens=p1, max_new=3, rid=1, priority=1))
+    eng.drain()
+    h = eng.health()
+    assert h["preempted"] == 1 and h["resumed"] == 1
+    assert FALLBACK_COUNTS["preempt"] == 1
+    by_rid = {c.rid: c for c in eng.completions}
+    assert by_rid[0].resumed == 1 and by_rid[0].finished == "max_new"
+    np.testing.assert_array_equal(
+        by_rid[0].tokens, _ref(st, cfg, ctx, p0, 8, eng.pool.max_len),
+        err_msg="preempted+resumed request diverged from generate")
+    np.testing.assert_array_equal(
+        by_rid[1].tokens, _ref(st, cfg, ctx, p1, 3, eng.pool.max_len))
+    # equal priority must NOT preempt (no livelock-swap): the late
+    # arrival waits for pages instead
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, page_size=8,
+                 n_pages=2)
+    eng.submit(Request(tokens=p0, max_new=4, rid=0))
+    eng.step()
+    eng.submit(Request(tokens=p1, max_new=2, rid=1))
+    eng.step()
+    assert eng.health()["preempted"] == 0
+    assert eng.health()["queued"] == 1
+    eng.drain()
+    assert all(c.finished == "max_new" for c in eng.completions)
+
+
+def test_alloc_failure_injection_both_seams(served):
+    cfg, st, ctx = served
+    p = _prompts(cfg, 1, seed=33)[0][:6]
+    inj = FaultInjector()
+    # can_alloc seam: pressure visible before prefill — admission waits
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16)
+    eng.submit(Request(tokens=p, max_new=2, rid=0))
+    with inj.alloc_failure(times=1) as probe:
+        eng.step()
+        assert eng.health()["queued"] == 1      # blocked, not crashed
+    assert probe.executions == 1
+    [c] = eng.drain()
+    assert c.finished == "max_new"
+    # alloc seam: post-prefill PoolExhausted — requeued at the head
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16)
+    eng.submit(Request(tokens=p, max_new=2, rid=0))
+    with inj.alloc_failure(times=1, seam="alloc") as probe:
+        eng.step()
+        assert eng.health()["queued"] == 1
+    assert probe.executions == 1
+    [c] = eng.drain()
+    assert c.finished == "max_new"
+
+
+def test_pool_alloc_free_invariants(served):
+    cfg, _, _ = served
+    pool = PagedKVPool(cfg, 2, 16, page_size=8)
+    pool.alloc(0)
+    with pytest.raises(PoolError, match="already owns"):
+        pool.alloc(0)                           # double alloc
+    n_free = len(pool.free_pages)
+    pool.free(1)                                # never allocated: no-op
+    assert len(pool.free_pages) == n_free
+    pool.free(0)
+    assert len(pool.free_pages) == pool.n_pages
+    # overcommit: 2 pages back only one slot
+    pool = PagedKVPool(cfg, 2, 16, page_size=8, n_pages=2)
+    pool.alloc(0)
+    assert not pool.can_alloc()
+    with pytest.raises(PoolExhausted, match="exhausted"):
+        pool.alloc(1)
+    with pytest.raises(ValueError, match="cannot back even one slot"):
+        PagedKVPool(cfg, 2, 16, page_size=8, n_pages=1)
+
+
+def test_drain_error_carries_health_and_slot_state(served):
+    """A non-converging drain must raise with the health snapshot and
+    per-slot/queue rid state attached — the operator's first clue."""
+    cfg, st, ctx = served
+    [p] = _prompts(cfg, 1, seed=35)
+    eng = Engine(ctx, st.params, n_slots=1, max_len=16)
+    eng.submit(Request(tokens=p, max_new=2, rid=0))
+    with FaultInjector().alloc_failure(times=1 << 30):
+        with pytest.raises(RuntimeError, match="did not converge") as ei:
+            eng.drain(max_steps=3)
+    msg = str(ei.value)
+    assert "health=" in msg and "queued rids=[0]" in msg
+
+
+# -- poisoned-request quarantine ---------------------------------------
+
+def test_quarantine_refuses_exactly_one_of_mixed_batch(served):
+    """The acceptance bar: a single-slot fault in a 3-request mixed batch
+    refuses exactly that request; the survivors resume and finish
+    bitwise-equal to an uninterrupted run — all on ONE generate_step
+    trace (the bisect's masked replays are traced-value changes)."""
+    cfg, st, ctx = served
+    cfgf = dataclasses.replace(cfg, name=cfg.name + "-sched-quar")
+    eng = Engine(ctx.with_cfg(cfgf), st.params, n_slots=3, max_len=16)
+    prompts = [p[:6] for p in _prompts(cfg, 3, seed=37)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(tokens=p, max_new=4, rid=i))
+    engine_mod.TRACE_COUNTS.clear()
+    # arm only until the quarantine fires, so the slot's next occupant
+    # (a resumed survivor) decodes clean
+    with FaultInjector().slot_fault(slot=1, nth=1):
+        while not any(c.finished == "refused" for c in eng.completions):
+            eng.step()
+    eng.drain()
+    assert engine_mod.TRACE_COUNTS["generate_step"] == 1, \
+        dict(engine_mod.TRACE_COUNTS)
+    by_rid = {c.rid: c for c in eng.completions}
+    assert by_rid[1].finished == "refused"       # slot 1's tenant
+    assert "poisoned" in by_rid[1].error
+    assert FALLBACK_COUNTS["quarantine"] == 1
+    for i in (0, 2):
+        assert by_rid[i].finished == "max_new" and by_rid[i].resumed == 1
+        np.testing.assert_array_equal(
+            by_rid[i].tokens, _ref(st, cfg, ctx, prompts[i], 4,
+                                   eng.pool.max_len),
+            err_msg=f"survivor {i} diverged after quarantine resume")
+
+
+def test_quarantine_after_exhausted_ladder(served):
+    """Under ResilientEngine the fault must first exhaust the whole
+    degradation ladder (it follows the request, not the kernel), and the
+    resulting ServeRefused drives the same bisect."""
+    cfg, st, _ = served
+    reng = ResilientEngine(cfg, st, policy=ResiliencePolicy(max_retries=0))
+    eng = reng.scheduler(n_slots=3, max_len=16)
+    prompts = [p[:6] for p in _prompts(cfg, 3, seed=39)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(tokens=p, max_new=3, rid=i))
+    with FaultInjector().slot_fault(slot=1, nth=1):
+        while not any(c.finished == "refused" for c in eng.completions):
+            eng.step()
+    eng.drain()
+    refused = [c for c in eng.completions if c.finished == "refused"]
+    assert len(refused) == 1 and refused[0].rid == 1
+    assert "ServeRefused" in refused[0].error
+    assert FALLBACK_COUNTS["quarantine"] == 1
+    survivors = [c for c in eng.completions if c.rid != 1]
+    assert all(c.finished == "max_new" and c.resumed == 1
+               for c in survivors)
+
+
+def test_decode_fault_mid_mixed_batch_walks_ladder(served):
+    """satellite: an in-graph decode_fault calibrated (via FaultProbe) to
+    fire mid-decode of a 2-request mixed batch — the ladder re-traces
+    unfused and the served outputs equal the clean run's bitwise; no
+    request is refused, because the fallback rung genuinely recovers."""
+    cfg, st, _ = served
+    prompts = [p[:6] for p in _prompts(cfg, 2, seed=41)]
+
+    def run(tag, nth):
+        reng = ResilientEngine(
+            dataclasses.replace(cfg, name=f"{cfg.name}-mid-{tag}"), st,
+            policy=ResiliencePolicy(max_retries=0))
+        eng = reng.scheduler(n_slots=2, max_len=16)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(tokens=p, max_new=5, rid=i))
+        with FaultInjector().decode_fault(nth=nth) as probe:
+            eng.step()                  # both admitted; first mixed tick
+            at_tick1 = probe.executions
+            eng.drain()
+        assert eng.health()["occupancy_max"] == 2
+        return reng, at_tick1, {c.rid: c.tokens for c in eng.completions}
+
+    # calibration: count fused executions up to the first mixed decode
+    # tick on a clean run, then arm the fault just past that point
+    _, at_tick1, clean = run("clean", nth=1 << 30)
+    reng, _, faulty = run("fault", nth=at_tick1 + 1)
     assert reng.last_rung == "unfused"
     assert FALLBACK_COUNTS["unfused"] >= 1
     for rid in clean:
