@@ -13,7 +13,7 @@ from .lzw import lzw_encode, lzw_decode, lzw_ratio
 from .compressed import (QuantLinear, PackedLinear, quantize_linear,
                          pack_linear, planned_packed_specs,
                          planned_quant_specs, lut_spec)
-from .policy import CompressionPolicy
+from .policy import CompressionPolicy, DeviceBudget, device_budget
 from .integrity import (IntegrityError, IntegrityReport, build_manifest,
                         check_invariants, verify_serve_state)
 
@@ -30,6 +30,8 @@ __all__ = [
     "QuantLinear", "PackedLinear", "quantize_linear", "pack_linear",
     "planned_packed_specs", "planned_quant_specs", "lut_spec",
     "CompressionPolicy",
+    "DeviceBudget",
+    "device_budget",
     "IntegrityError", "IntegrityReport", "build_manifest",
     "check_invariants", "verify_serve_state",
 ]

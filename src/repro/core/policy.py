@@ -55,3 +55,74 @@ class CompressionPolicy:
                 return "compressed"
             return "quant"
         return self.mode
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceBudget:
+    """HBM budget split for tiered-residency serving (bytes throughout).
+
+    The paper's deployment regime is a 4–8 GB unified-memory edge device:
+    the compressed model does not have to fit — only the *resident* slice
+    does.  ``fits`` says whether everything that must stay on-device
+    (non-expert weights + KV pages + activation headroom) leaves any room
+    at all; ``expert_cache_bytes`` is what's left over for the per-layer
+    expert cache, and ``cache_experts_per_layer`` converts it at a given
+    per-expert compressed footprint.
+    """
+    budget_bytes: int
+    resident_bytes: int        # non-expert weights pinned on device
+    kv_bytes: int              # KV pool / paged cache
+    act_bytes: int             # activation + workspace headroom
+    expert_bytes: int          # total compressed expert planes (all layers)
+
+    @property
+    def reserved_bytes(self) -> int:
+        return self.resident_bytes + self.kv_bytes + self.act_bytes
+
+    @property
+    def expert_cache_bytes(self) -> int:
+        """Bytes left for the HBM expert cache (may be 0)."""
+        return max(0, self.budget_bytes - self.reserved_bytes)
+
+    @property
+    def fits(self) -> bool:
+        """True when the reserved set + at least one cached expert's worth
+        of planes fits the budget (expert_bytes == 0 → just the reserve)."""
+        return self.expert_cache_bytes > 0 or self.expert_bytes == 0
+
+    @property
+    def fully_resident(self) -> bool:
+        """True when every compressed expert fits alongside the reserve —
+        tiering would only add bookkeeping."""
+        return self.expert_cache_bytes >= self.expert_bytes
+
+    def cache_experts_per_layer(self, n_layers: int,
+                                bytes_per_expert: int) -> int:
+        """Experts per MoE layer the leftover budget can cache (>= 0)."""
+        if n_layers <= 0 or bytes_per_expert <= 0:
+            return 0
+        return int(self.expert_cache_bytes // (n_layers * bytes_per_expert))
+
+    def summary(self) -> str:
+        mib = 2.0 ** 20
+        return (f"device budget {self.budget_bytes / mib:.0f} MiB: "
+                f"resident {self.resident_bytes / mib:.1f} + "
+                f"kv {self.kv_bytes / mib:.1f} + "
+                f"act {self.act_bytes / mib:.1f} MiB reserved -> "
+                f"{self.expert_cache_bytes / mib:.1f} MiB expert cache "
+                f"({'fully resident' if self.fully_resident else 'tiered'}"
+                f"; experts total {self.expert_bytes / mib:.1f} MiB)")
+
+
+def device_budget(budget_bytes: int, *, expert_bytes: int,
+                  resident_bytes: int = 0, kv_bytes: int = 0,
+                  act_bytes: int = 0) -> DeviceBudget:
+    """Split an HBM byte budget across what must vs may live on device.
+
+    Used by ``launch/serve.py`` to default ``--expert-cache-mib`` and by
+    dry-run prints; see ``docs/residency.md`` for the 4–8 GB budget math.
+    """
+    return DeviceBudget(budget_bytes=int(budget_bytes),
+                        resident_bytes=int(resident_bytes),
+                        kv_bytes=int(kv_bytes), act_bytes=int(act_bytes),
+                        expert_bytes=int(expert_bytes))

@@ -24,6 +24,7 @@ file and set nowhere else in the repo.
 import argparse
 import dataclasses
 import json
+import math
 import time
 import traceback
 from functools import partial
@@ -167,8 +168,37 @@ def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
                 lowered = jf.lower(pspecs, lut, cell["batch"]["tokens"],
                                    cell["caches"], cell["pos"])
         compiled = lowered.compile()
-    return compiled, {"mesh": "multi" if multi_pod else "single",
-                      "kind": kind, "mode": mode}
+    meta = {"mesh": "multi" if multi_pod else "single",
+            "kind": kind, "mode": mode}
+    if kind != "train" and mode == "compressed":
+        budget = _residency_budget(pspecs, lut, cell["caches"])
+        if budget is not None:
+            meta["residency_budget"] = budget.summary()
+    return compiled, meta
+
+
+def _residency_budget(pspecs, lut, caches, budget_mib: int = 4096):
+    """Tiered-residency budget math for one serve cell (spec trees only —
+    no allocation): how much of the paper's 4 GiB edge budget is left for
+    the HBM expert cache once non-expert weights + KV + activation
+    headroom are pinned.  None for non-MoE archs."""
+    from repro.core.policy import device_budget
+    try:
+        experts = pspecs["blocks"]["moe"]["experts"]
+    except (KeyError, TypeError):
+        return None
+
+    def nb(tree):
+        return sum(math.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree_util.tree_leaves(tree)
+                   if hasattr(l, "shape") and hasattr(l, "dtype"))
+
+    expert_bytes = nb(experts)
+    resident = nb(pspecs) - expert_bytes + (nb(lut) if lut is not None
+                                            else 0)
+    return device_budget(budget_mib * 2**20, expert_bytes=expert_bytes,
+                         resident_bytes=resident, kv_bytes=nb(caches),
+                         act_bytes=64 * 2**20)
 
 
 def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
@@ -184,6 +214,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
             rec["wall_s"] = round(time.monotonic() - t0, 1)
             return rec
         rec["memory"] = hlo_stats.memory_stats(compiled)
+        if "residency_budget" in meta:
+            rec["residency_budget"] = meta["residency_budget"]
         rec["cost"] = hlo_stats.cost_stats(compiled)
         hlo = compiled.as_text()
         # trip-weighted FLOP/byte model (XLA's cost_analysis counts while
@@ -240,6 +272,8 @@ def main():
                 print(f"[{status}] {arch} {shape} {mesh_kind} "
                       f"hbm/dev={mem/2**30:.2f}GiB wall={rec['wall_s']}s",
                       flush=True)
+                if rec.get("residency_budget"):
+                    print("  " + rec["residency_budget"], flush=True)
                 if not rec.get("ok"):
                     print(rec.get("error"), flush=True)
 

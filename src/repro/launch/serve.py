@@ -25,6 +25,15 @@ shard-mapped fused decode→dequant→matmul path — a single traced program
 per phase, no dense per-device weight materialization (the dispatch
 summary printed at the end proves which paths ran).  ``--tiles N`` stores
 eligible weights as 2D-TP column tiles (TiledPackedLinear).
+
+Tiered expert residency (``--residency tiered``, compressed MoE archs,
+mesh-less): compressed expert planes back off to host RAM and an HBM
+cache of ``--expert-cache-mib`` (0 = auto from ``--hbm-budget-mib`` via
+``core.policy.device_budget`` — the paper's 4–8 GB edge budget) serves
+the grouped kernel, with routing-aware one-layer-ahead prefetch
+(serve/residency.py, docs/residency.md).  Outputs are bitwise-equal to
+fully-resident serving; the summary adds hit/miss/prefetch/eviction/
+bytes-fetched counters alongside the resilience health snapshot.
 """
 from __future__ import annotations
 
@@ -103,6 +112,20 @@ def main():
                          "sampled digests, full = every byte) plus the "
                          "device-side invariant check; corrupt leaves "
                          "refuse to serve (core/integrity.py)")
+    ap.add_argument("--residency", default="hbm",
+                    choices=["hbm", "tiered"],
+                    help="expert residency: 'hbm' keeps every compressed "
+                         "expert on device; 'tiered' backs them in host "
+                         "RAM with a routing-aware HBM cache "
+                         "(serve/residency.py; compressed MoE only, "
+                         "mesh-less)")
+    ap.add_argument("--expert-cache-mib", type=int, default=0,
+                    help="HBM expert-cache size for --residency tiered "
+                         "(0 = auto from --hbm-budget-mib via "
+                         "core.policy.device_budget)")
+    ap.add_argument("--hbm-budget-mib", type=int, default=4096,
+                    help="device memory budget used to auto-size the "
+                         "expert cache (paper target: 4-8 GB edge)")
     args = ap.parse_args()
 
     mesh = _parse_mesh(args.mesh)
@@ -133,13 +156,52 @@ def main():
         print(f"mesh: {dict(mesh.shape)}")
 
     max_len = args.prompt_len + args.max_new
+    residency = None
+    if args.residency == "tiered":
+        # Tiered expert residency: compressed expert planes back off to
+        # host RAM; an HBM cache sized by the device budget serves the
+        # grouped kernel (serve/residency.py).  Compressed MoE, mesh-less.
+        from repro.core.policy import device_budget
+        from repro.serve.kv_cache import PagedKVPool
+        from repro.serve.residency import ResidencyManager
+        assert args.mode == "compressed", \
+            "--residency tiered requires --mode compressed"
+        assert mesh is None, "--residency tiered is single-device (no --mesh)"
+
+        def _tree_bytes(t):
+            return sum(int(l.nbytes) for l in jax.tree_util.tree_leaves(t)
+                       if hasattr(l, "nbytes"))
+
+        expert_bytes = _tree_bytes(sp["blocks"]["moe"]["experts"])
+        resident_bytes = _tree_bytes(sp) - expert_bytes + \
+            (int(lut.nbytes) if lut is not None else 0)
+        probe_pool = PagedKVPool(cfg, args.slots, max_len,
+                                 page_size=args.page_size)
+        kv_bytes = _tree_bytes(probe_pool.pages)
+        del probe_pool
+        budget = device_budget(args.hbm_budget_mib * 2**20,
+                               expert_bytes=expert_bytes,
+                               resident_bytes=resident_bytes,
+                               kv_bytes=kv_bytes,
+                               act_bytes=64 * 2**20)
+        print(budget.summary())
+        cache_bytes = (args.expert_cache_mib * 2**20
+                       if args.expert_cache_mib > 0
+                       else budget.expert_cache_bytes)
+        st = dataclasses.replace(st, params=sp, lut=lut)
+        residency = ResidencyManager(st, cfg, cache_bytes=cache_bytes)
+        print(f"expert cache: {residency.capacity}/{residency.n_experts} "
+              f"experts/layer x {residency.n_layers} layers "
+              f"({residency.capacity * residency.n_layers * residency.bytes_per_expert / 2**20:.2f} MiB of "
+              f"{cache_bytes / 2**20:.2f} MiB granted)")
     if st is not None:
         # integrity gate (manifest re-hash + device invariants) runs at
         # construction when --verify is on; corrupt leaves raise
         # IntegrityError naming themselves instead of serving garbage.
         rengine = ResilientEngine(
             cfg, dataclasses.replace(st, params=sp, lut=lut),
-            policy=ResiliencePolicy(verify=args.verify), mesh=mesh)
+            policy=ResiliencePolicy(verify=args.verify), mesh=mesh,
+            residency=residency)
         if args.verify != "off":
             print(rengine.verify_report.summary())
             print(rengine.invariant_report.summary())
@@ -190,6 +252,13 @@ def main():
         print("matmul dispatch:", dict(ops.DISPATCH_COUNTS))
     if rengine is not None:
         print("health:", rengine.health())
+    if rengine is not None and rengine.residency is not None:
+        r = rengine.residency.snapshot()
+        print(f"residency: hits {r['hit']} (+{r['prefetch_hit']} prefetch) "
+              f"misses {r['miss']} evictions {r['evict']} "
+              f"fetched {r['bytes_fetched']/2**20:.2f} MiB "
+              f"hit_rate {r['hit_rate']} prefetch_hit_rate "
+              f"{r['prefetch_hit_rate']} stall {r['stall_s']:.3f}s")
     by_rid = {c.rid: c for c in eng.completions}
     print("sample:", by_rid[0].tokens[args.prompt_len:].tolist())
 

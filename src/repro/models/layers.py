@@ -796,14 +796,33 @@ def apply_moe_local(p: Params, x: jax.Array, cfg, *, lut=None,
     return y, aux
 
 
-def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto"):
+def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto",
+              with_routing: bool = False):
     """Capacity-based top-k MoE with sort-free scatter dispatch.
 
     Returns (y, aux_loss).  Dropless up to ``capacity_factor``; overflow
     tokens fall through to the shared experts / residual (standard
     capacity-drop semantics).
+
+    ``with_routing=True`` additionally returns the raw top-k expert ids
+    (n_tok, k) int32 — the tiered-residency manager (serve/residency.py)
+    reads them host-side to decide which experts the next step needs.
+    Routing forces the global dispatch path (the local shard_map path has
+    no single routing tensor to return).
+
+    When ``p["residency"]`` is present (a per-layer ``{"slot_of_expert",
+    "expert_of_slot"}`` pair of int32 maps installed by the residency
+    manager), the expert stacks in ``p["experts"]`` hold only the
+    HBM-cached *slots*: routed activations are gathered into slot order,
+    the grouped kernel runs over the C-slot stacks, and outputs scatter
+    back to expert order.  Absent experts read out-of-bounds and fill
+    with exact zeros — the manager guarantees every *routed* expert is
+    resident before a step commits, so those zero rows only ever multiply
+    zero gates and the combine stays bitwise-equal to the fully-resident
+    path.
     """
-    if getattr(cfg, "moe_local_dispatch", False):
+    if getattr(cfg, "moe_local_dispatch", False) and not with_routing \
+            and p.get("residency") is None:
         from repro.sharding.partition import current_mesh
         axis_sizes, mesh = current_mesh()
         msize = axis_sizes.get("model", 1)
@@ -856,7 +875,8 @@ def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto"):
     # token all-to-all any EP implementation pays.
     xe = constrain(xe, "model", None, None)
 
-    if getattr(cfg, "moe_expert_scan", False):
+    res = p.get("residency")
+    if getattr(cfg, "moe_expert_scan", False) and res is None:
         # Paper's decompress-on-demand at *expert* granularity: scan over
         # experts, decode one expert's weights at a time — peak memory is
         # (all experts compressed) + (one expert dense), the MoE analogue
@@ -876,6 +896,20 @@ def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto"):
             expert_body, None,
             (p["experts"]["w_gate"], p["experts"]["w_up"],
              p["experts"]["w_down"], xe))
+    elif res is not None:
+        # Tiered residency: only the HBM-cached slots carry expert planes.
+        # Gather routed activations into slot order (vacant slots — sentinel
+        # index E, out of bounds — fill with zeros), run the grouped kernel
+        # over the C-slot stacks, scatter back to expert order (absent
+        # experts — sentinel index C — fill with zeros, multiplied below by
+        # their all-zero gtable rows).  Per-expert kernel tiles see exactly
+        # the bytes and activations the fully-resident stack would give
+        # them, so resident rows are bitwise-identical.
+        xe_c = jnp.take(xe, res["expert_of_slot"], axis=0,
+                        mode="fill", fill_value=0)         # (C, cap, d)
+        ye_c = _expert_ffn(p["experts"], xe_c, lut, impl)
+        ye = jnp.take(ye_c, res["slot_of_expert"], axis=0,
+                      mode="fill", fill_value=0)           # (e, cap, d)
     else:
         # Grouped fused expert FFN: compressed stacks stream through the
         # expert-grid megakernel (shard-mapped onto the model axis under a
@@ -890,4 +924,7 @@ def apply_moe(p: Params, x: jax.Array, cfg, *, lut=None, impl: str = "auto"):
 
     if "shared" in p:
         y = y + apply_mlp(p["shared"], xf, lut=lut, impl=impl)
-    return y.reshape(b, t, d), aux
+    y = y.reshape(b, t, d)
+    if with_routing:
+        return y, aux, expert_ids
+    return y, aux

@@ -146,7 +146,7 @@ def _dense_block(bp, x, cfg, lut, cache, pos, impl, causal=True):
     return x, new_cache
 
 
-def _moe_block(bp, x, cfg, lut, cache, pos, impl):
+def _moe_block(bp, x, cfg, lut, cache, pos, impl, with_routing=False):
     h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
     if cfg.mla:
         a, new_cache = L.apply_mla(bp["attn"], h, cfg, lut=lut, cache=cache,
@@ -156,10 +156,16 @@ def _moe_block(bp, x, cfg, lut, cache, pos, impl):
                                          cache=cache, pos=pos, impl=impl)
     x = x + a
     h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    if "moe" in bp and with_routing:
+        y, aux, eids = L.apply_moe(bp["moe"], h, cfg, lut=lut, impl=impl,
+                                   with_routing=True)
+        return x + y, new_cache, aux, eids
     if "moe" in bp:
         y, aux = L.apply_moe(bp["moe"], h, cfg, lut=lut, impl=impl)
     else:
         y, aux = L.apply_mlp(bp["mlp"], h, lut=lut, impl=impl), 0.0
+    if with_routing:  # dense block inside an eids-carrying stack: no router
+        raise ValueError("with_routing requires an MoE block")
     return x + y, new_cache, aux
 
 
@@ -174,9 +180,18 @@ def _ssm_block(bp, x, cfg, lut, cache, impl):
 # Stack runners.
 # ---------------------------------------------------------------------------
 
-def _run_stack(params, x, cfg, *, lut, caches, pos, impl):
-    """Scan homogeneous stacked blocks; returns (x, new_caches, aux_sum)."""
+def _run_stack(params, x, cfg, *, lut, caches, pos, impl,
+               with_routing=False):
+    """Scan homogeneous stacked blocks; returns (x, new_caches, aux_sum).
+
+    ``with_routing=True`` (MoE stacks only) threads each layer's top-k
+    expert ids out as an extra scan output and returns
+    ``(x, new_caches, aux_sum, routing)`` with routing (L, n_tok, k) int32
+    — the host-side signal the tiered residency manager plans fetches
+    from (serve/residency.py)."""
     fam = cfg.family
+    if with_routing and fam != "moe":
+        raise ValueError(f"with_routing needs an MoE stack, got {fam!r}")
 
     def body(carry, xs):
         x, aux = carry
@@ -186,6 +201,10 @@ def _run_stack(params, x, cfg, *, lut, caches, pos, impl):
             x, nc = _dense_block(bp, x, cfg, lut, cache, pos, impl)
             return (x, aux), nc
         if fam == "moe":
+            if with_routing:
+                x, nc, a, eids = _moe_block(bp, x, cfg, lut, cache, pos,
+                                            impl, with_routing=True)
+                return (x, aux + a), (nc, eids)
             x, nc, a = _moe_block(bp, x, cfg, lut, cache, pos, impl)
             return (x, aux + a), nc
         if fam in ("ssm", "hybrid"):
@@ -197,6 +216,9 @@ def _run_stack(params, x, cfg, *, lut, caches, pos, impl):
         body = jax.checkpoint(body)
     (x, aux), new_caches = scan_or_unroll(cfg, body, (x, jnp.float32(0.0)),
                                           (params, caches))
+    if with_routing:
+        new_caches, routing = new_caches
+        return x, new_caches, aux, routing
     return x, new_caches, aux
 
 
@@ -219,7 +241,8 @@ def _hybrid_segments(cfg):
 
 def forward(params: Params, cfg, tokens: Optional[jax.Array] = None, *,
             embeds: Optional[jax.Array] = None, caches=None, pos=None,
-            lut=None, impl: str = "auto", return_hidden: bool = False):
+            lut=None, impl: str = "auto", return_hidden: bool = False,
+            return_routing: bool = False):
     """Full forward pass.
 
     tokens: (B, T) int32 — embedded via the table; embeds: (B, T', d)
@@ -230,6 +253,12 @@ def forward(params: Params, cfg, tokens: Optional[jax.Array] = None, *,
     hidden states instead of logits — the chunked-CE training path computes
     head matmul + softmax per sequence chunk so the (B, T, V) logits tensor
     never materializes (see train.steps.chunked_cross_entropy).
+
+    ``return_routing=True`` (MoE family only) appends the per-layer top-k
+    expert ids of the *stacked* MoE layers — (L_moe, B*T, k) int32 — to
+    the return tuple; unrolled first-dense layers have no router and
+    contribute nothing.  Consumed host-side by the tiered expert-residency
+    manager (serve/residency.py).
     """
     if tokens is not None:
         x = L.embed(params["embed"], tokens, lut)
@@ -246,6 +275,9 @@ def forward(params: Params, cfg, tokens: Optional[jax.Array] = None, *,
     aux_total = jnp.float32(0.0)
     new_caches: dict = {}
     fam = cfg.family
+    routing = None
+    if return_routing and fam != "moe":
+        raise ValueError(f"return_routing needs family 'moe', got {fam!r}")
 
     if fam == "moe" and "first_blocks" in params:
         fb_caches = (caches or {}).get("first", [None] * len(params["first_blocks"]))
@@ -282,19 +314,28 @@ def forward(params: Params, cfg, tokens: Optional[jax.Array] = None, *,
                                     if fam == "moe" else 0)
         if blk_caches is None:
             blk_caches = _none_caches(n_stacked)
-        x, nc, aux = _run_stack(params["blocks"], x, cfg, lut=lut,
-                                caches=blk_caches, pos=pos, impl=impl)
+        if return_routing:
+            x, nc, aux, routing = _run_stack(
+                params["blocks"], x, cfg, lut=lut, caches=blk_caches,
+                pos=pos, impl=impl, with_routing=True)
+        else:
+            x, nc, aux = _run_stack(params["blocks"], x, cfg, lut=lut,
+                                    caches=blk_caches, pos=pos, impl=impl)
         aux_total = aux_total + aux
         new_caches["blocks"] = nc
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     if return_hidden:
+        if return_routing:
+            return x, new_caches, aux_total, routing
         return x, new_caches, aux_total
     head = params.get("lm_head", params["embed"])
     logits = L.linear(x, head, lut, impl=impl)
     if cfg.logits_softcap:
         c = cfg.logits_softcap
         logits = jnp.tanh(logits / c) * c
+    if return_routing:
+        return logits, new_caches, aux_total, routing
     return logits, new_caches, aux_total
 
 

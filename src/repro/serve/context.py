@@ -28,11 +28,18 @@ class ServeContext:
     lut:    the model-wide dictionary LUT for compressed decode, or None.
     verify: integrity-gate level — 'off' | 'fast' | 'full' (host policy,
             consumed by ResilientEngine / launch drivers, not by jit).
+    residency: a ``serve.residency.ResidencyManager`` for tiered expert
+            residency (host-RAM backing store + HBM expert cache), or None
+            for fully-HBM-resident serving.  Host-side policy — every
+            serving entry point that sees it routes steps through the
+            manager's fetch/replay protocol; ``with_cfg`` preserves it, so
+            degradation-ladder rungs share one cache.
     """
     cfg: Any
     mesh: Any = None
     lut: Any = None
     verify: str = "off"
+    residency: Any = None
 
     @classmethod
     def from_state(cls, cfg, state, *, mesh=None,

@@ -305,6 +305,13 @@ def make_serve_fns(cfg=None, *, jit: bool = True, mesh=None, ctx=None):
     if ctx is not None:
         cfg = ctx.cfg if cfg is None else cfg
         mesh = ctx.mesh
+        if getattr(ctx, "residency", None) is not None:
+            # Tiered expert residency: the returned closures run each step
+            # through the ResidencyManager's fetch/replay protocol (always
+            # jitted inside — see serve/residency.py).
+            from repro.serve import residency as _res
+            return _res.make_tiered_serve_fns(
+                ctx if cfg is ctx.cfg else ctx.with_cfg(cfg))
     elif mesh is not None:
         _warn_loose_kwargs("make_serve_fns")
     if jit:
@@ -333,8 +340,14 @@ def _jitted_serve_fns(cfg, mesh=None):
     return wrap(prefill), wrap(decode_step)
 
 
-def _raw_serve_fns(cfg):
+def _raw_serve_fns(cfg, routing: bool = False):
+    """``routing=True`` (MoE only): prefill/decode_step additionally return
+    the per-layer top-k expert ids — (L_moe, n_tok, k) int32 — so the
+    tiered residency manager can plan fetches from the step it just ran
+    (serve/residency.py)."""
     fam = cfg.family
+    if routing and fam == "encdec":
+        raise ValueError("routing capture is not supported for encdec")
 
     def _last_logits(params, hidden, lut=None):
         """LM head on the final position only — prefill never materializes
@@ -360,6 +373,24 @@ def _raw_serve_fns(cfg):
                                                 pos, lut=lut)
             return logits[:, -1], new_caches
         return prefill, decode_step
+
+    if routing:
+        def prefill_r(params, lut, batch, caches):
+            TRACE_COUNTS["prefill"] += 1
+            hidden, new_caches, _, eids = LM.forward(
+                params, cfg, batch.get("tokens"),
+                embeds=batch.get("embeds"), caches=caches, pos=0, lut=lut,
+                return_hidden=True, return_routing=True)
+            return _last_logits(params, hidden, lut), new_caches, eids
+
+        def decode_step_r(params, lut, token, caches, pos):
+            TRACE_COUNTS["decode_step"] += 1
+            logits, new_caches, _, eids = LM.forward(
+                params, cfg, token, caches=caches, pos=pos, lut=lut,
+                return_routing=True)
+            return logits[:, -1], new_caches, eids
+
+        return prefill_r, decode_step_r
 
     def prefill(params, lut, batch, caches):
         TRACE_COUNTS["prefill"] += 1
@@ -467,6 +498,16 @@ def generate(params, cfg, tokens, *, ctx=None, lut=None, max_new: int = 16,
     if ctx is not None:
         cfg = ctx.cfg if cfg is None else cfg
         lut, mesh = ctx.lut, ctx.mesh
+        if getattr(ctx, "residency", None) is not None:
+            # Tiered expert residency: a host-stepped decode loop through
+            # the ResidencyManager (bitwise-equal to this scan loop — the
+            # per-step jitted program is the same computation; see
+            # serve/residency.py and tests/test_residency.py).
+            from repro.serve import residency as _res
+            return _res.tiered_generate(
+                params, cfg, tokens, ctx=ctx, max_new=max_new,
+                max_len=max_len, temperature=temperature, key=key,
+                embeds=embeds)
     elif lut is not None or mesh is not None:
         _warn_loose_kwargs("generate")
     if max_new <= 0:

@@ -1,0 +1,754 @@
+"""Tiered expert residency — host-RAM backing store + HBM expert cache.
+
+The paper's premise is a 4–8 GB unified-memory edge budget, but until now
+every compressed expert plane had to be fully HBM-resident — Kimi-K2-class
+configs (1T params) don't fit even compressed on small device counts.
+This module decouples model size from HBM (QMoE's offload framing,
+MobileMoE's router-driven on-device prefetch):
+
+  * **Backing tier** — the compressed expert planes (codes / literals /
+    nlit / scale / zero for w_gate / w_up / w_down) live pinned in host
+    RAM as numpy arrays, integrity-checked against the pack-time manifest
+    at construction and re-CRC'd per expert slice on every fetch
+    (``core/integrity.py`` — a corrupt plane raises ``IntegrityError``
+    naming (layer, expert, plane) *before* it reaches the device).
+  * **HBM cache** — a fixed-capacity per-layer cache of hot experts,
+    stored as C-slot stacked ``PackedLinear`` planes that feed the same
+    grouped fused decode→dequant→matmul megakernel as the fully-resident
+    path (``MATERIALIZE_COUNTS['packed_stacked']`` stays 0: a miss falls
+    back to a synchronous fetch, never to materializing dense weights).
+    Slots are LRU-evicted and generation-stamped; per-layer
+    ``slot_of_expert`` / ``expert_of_slot`` maps travel *inside* the
+    served param tree, so map changes are traced-value changes — never
+    retraces.
+  * **Bitwise parity** — ``models.layers.apply_moe`` gathers routed
+    activations into slot order, runs the kernel over the C-slot stacks,
+    and scatters outputs back to expert order with out-of-bounds→zero
+    fills.  Resident experts see exactly the bytes and activations the
+    fully-resident stack would give them; absent experts contribute only
+    zero rows multiplied by their all-zero gate rows.  The manager
+    guarantees every *routed* expert is resident before a step's outputs
+    are used, via the fetch/replay protocol below — so outputs stay
+    bitwise-equal to the fully-resident path at any capacity ≥ 1
+    (asserted at capacities {all, half, 1} in tests/test_residency.py).
+
+**Fetch/replay protocol** (``ResidencyManager.run``): launch the jitted
+step against the current cache, read back the per-layer routing it
+reports (``LM.forward(..., return_routing=True)``), and check it against
+the slot table.  If every routed expert was resident, the outputs are
+exact — commit (LRU touch, trim transient over-allocation, issue next
+prefetches) and return.  Otherwise routing is only *trusted* up to the
+first layer with a miss (deeper layers saw wrong inputs): fetch that
+prefix's missing experts synchronously (the stall the benchmark measures)
+and replay the same pure step — the trusted prefix grows by at least one
+layer per pass, so the loop converges in ≤ n_layers passes.  A single
+step's working set may transiently exceed the retained capacity (e.g.
+capacity 1 with several routed experts): the cache *grows* extra slots
+for the step and trims back to capacity at commit.
+
+**Prefetch** (the routing-aware part): at commit, layer *l*'s observed
+routing predicts layer *l+1*'s hot set one layer ahead — during decode
+that is the previous token's routing, under the scheduler the previous
+tick's.  A background worker slices + verifies + ``jax.device_put``s the
+predicted experts while the host is between steps; ``run`` joins and
+installs them (generation-stamped, source='prefetch') before the next
+launch.  First use of a prefetched slot counts ``prefetch_hit``.
+
+Observability: every event ticks ``RESIDENCY_COUNTS`` (hit / miss /
+prefetch_hit / prefetch_issued / prefetch_installed / evict / sync_fetch
+/ bytes_fetched / replay), mirrored per-manager with stall seconds;
+``scheduler.Engine.health()`` and ``ResilientEngine.health()`` surface a
+snapshot and ``benchmarks/residency.py`` lands the rates in
+``BENCH_residency.json``.  Fetch faults (``FaultInjector.fetch_fault``
+patches the module-level ``_transfer`` seam) raise ``JaxRuntimeError``
+and walk the degradation ladder like any device fault — a miss-storm
+under a persistent fault surfaces as refused requests, never a hang.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import queue
+import threading
+import time
+import zlib
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Set
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressed import PackedLinear
+from repro.core.integrity import IntegrityError, IntegrityReport
+from repro.models import lm as LM
+from repro.serve import engine as _engine
+
+# Residency probe: event -> count, reset by the autouse conftest fixture
+# and by scheduler.Engine.reset_stats().  'hit': a routed expert was
+# already cached; 'prefetch_hit': the hit's slot was installed by the
+# prefetcher and this is its first use; 'miss'/'sync_fetch': a routed
+# expert had to be fetched synchronously (stall); 'prefetch_issued'/
+# 'prefetch_installed': predictions queued / landed in a slot; 'evict':
+# an occupied slot was reassigned or trimmed; 'bytes_fetched': compressed
+# bytes moved host->device; 'replay': extra fetch-and-replay passes.
+RESIDENCY_COUNTS = collections.Counter()
+
+_PLANES = ("codes", "literals", "nlit", "scale", "zero")
+_EXPERT_KEYS = ("w_gate", "w_up", "w_down")
+
+
+class ResidencyError(RuntimeError):
+    """Residency-protocol failure (bad wiring, non-convergent replay)."""
+
+
+def _transfer(arrays):
+    """Host→device copy of one expert's planes ({(key, plane): np array}).
+
+    The one seam every fetch and prefetch crosses — module-level so
+    ``FaultInjector.fetch_fault`` can patch it to fail (raising
+    ``jax.errors.JaxRuntimeError``, which walks the degradation ladder)
+    or delay (modelling a saturated host↔device link).
+    """
+    return jax.device_put(arrays)
+
+
+@jax.jit
+def _slot_set(plane, l, s, val):
+    """Write one expert's plane into cache slot (l, s) — (l, s) are traced
+    scalars, so installs never retrace."""
+    return plane.at[l, s].set(val)
+
+
+@jax.jit
+def _gather_slots(plane, idx):
+    """Per-layer slot shuffle: plane (L, C, ...) gathered to (L, C', ...)
+    by idx (L, C') — the trim-to-capacity compaction."""
+    return plane[jnp.arange(plane.shape[0])[:, None], idx]
+
+
+@dataclasses.dataclass
+class _SlotRec:
+    """Host-side record of one HBM cache slot."""
+    expert: int = -1          # -1 = vacant
+    last_used: int = 0        # LRU tick (monotonic per manager)
+    gen: int = 0              # install generation stamp
+    source: str = ""          # 'demand' | 'prefetch'
+    fresh: bool = False       # installed but not yet served from
+
+
+class ResidencyManager:
+    """Owns the expert cache slots and the host backing store.
+
+    state: an ``engine.ServeState`` (params + manifest), or any object
+    with ``params``/``manifest`` attributes.  capacity: retained experts
+    per layer (defaults to all — fully resident, but through the cache
+    machinery); cache_bytes sizes capacity from an HBM byte budget
+    instead.  prefetch=False disables the background worker (demand
+    fetches only).  verify=False skips the construction-time manifest
+    check (per-fetch slice CRCs still run).
+    """
+
+    def __init__(self, state, cfg, *, capacity: Optional[int] = None,
+                 cache_bytes: Optional[int] = None, prefetch: bool = True,
+                 verify: bool = True):
+        params = getattr(state, "params", state)
+        manifest = getattr(state, "manifest", None)
+        if getattr(cfg, "moe_expert_scan", False):
+            raise ResidencyError("tiered residency and moe_expert_scan are "
+                                 "mutually exclusive (both own expert-"
+                                 "granular memory)")
+        if getattr(cfg, "moe_local_dispatch", False):
+            raise ResidencyError("tiered residency requires global MoE "
+                                 "dispatch (moe_local_dispatch=False)")
+        try:
+            experts = params["blocks"]["moe"]["experts"]
+        except (KeyError, TypeError):
+            raise ResidencyError("params carry no blocks.moe.experts stack "
+                                 "— tiered residency needs an MoE family "
+                                 "compressed model")
+        for k in _EXPERT_KEYS:
+            w = experts.get(k)
+            if not (isinstance(w, PackedLinear) and w.codes.ndim == 4
+                    and w.tile_n > 0):
+                raise ResidencyError(
+                    f"expert stack {k!r} is not a tile-major stacked "
+                    f"PackedLinear — tiered residency caches compressed "
+                    f"planes only (got {type(w).__name__})")
+        self.cfg = cfg
+        self._source_params = params
+        self.n_layers, self.n_experts = (int(d) for d in
+                                         experts["w_gate"].codes.shape[:2])
+
+        # Backing tier: pinned host copies of every expert plane.
+        self._host: Dict[str, Dict[str, np.ndarray]] = {
+            k: {pl: np.array(jax.device_get(getattr(experts[k], pl)),
+                             order="C")      # owned, writable host copy
+                for pl in _PLANES}
+            for k in _EXPERT_KEYS}
+        self.bytes_per_expert = sum(
+            self._host[k][pl][0, 0].nbytes
+            for k in _EXPERT_KEYS for pl in _PLANES)
+        if verify and manifest is not None:
+            self._verify_backing(params, manifest)
+        # Per-(layer, expert, plane) slice digests: every later fetch is
+        # re-hashed against these, so backing-store rot is caught at fetch
+        # time, named, and never served.
+        self._slice_crc = {
+            (l, e, k, pl): zlib.crc32(np.ascontiguousarray(
+                self._host[k][pl][l, e]).reshape(-1).view(np.uint8))
+            & 0xFFFFFFFF
+            for k in _EXPERT_KEYS for pl in _PLANES
+            for l in range(self.n_layers) for e in range(self.n_experts)}
+
+        if capacity is None and cache_bytes is not None:
+            capacity = int(cache_bytes //
+                           (self.n_layers * self.bytes_per_expert))
+        self.capacity = (self.n_experts if capacity is None
+                         else max(1, min(int(capacity), self.n_experts)))
+        self.c_alloc = self.capacity
+
+        # HBM tier: zero-initialised C-slot cache stacks, same container
+        # metadata as the source so the grouped-kernel gate stays open.
+        self._stacks: Dict[str, PackedLinear] = {}
+        for k in _EXPERT_KEYS:
+            src = experts[k]
+            zp = {pl: jnp.zeros(
+                (self.n_layers, self.c_alloc) + self._host[k][pl].shape[2:],
+                getattr(src, pl).dtype) for pl in _PLANES}
+            self._stacks[k] = PackedLinear(
+                zp["codes"], zp["literals"], zp["nlit"], zp["scale"],
+                zp["zero"], shape=src.shape, seq_len=src.seq_len,
+                row_parallel=src.row_parallel, tile_n=src.tile_n,
+                tile_k=src.tile_k)
+
+        # Served tree: the caller's params with the expert stacks swapped
+        # for the cache stacks and the residency maps riding alongside
+        # (layer-sliced by the block scan).  Non-expert leaves are shared
+        # by reference.
+        blocks = dict(params["blocks"])
+        moe = dict(blocks["moe"])
+        moe["experts"] = self._stacks
+        self._res_maps: Dict[str, jax.Array] = {}
+        moe["residency"] = self._res_maps
+        blocks["moe"] = moe
+        self._dp = {**params, "blocks": blocks}
+
+        self._slots: List[List[_SlotRec]] = [
+            [_SlotRec() for _ in range(self.c_alloc)]
+            for _ in range(self.n_layers)]
+        self._where: List[Dict[int, int]] = [
+            {} for _ in range(self.n_layers)]
+        self._maps_dirty = True
+        self._ticks = 0
+        self._gen = 0
+        self._last_needed: Dict[int, Set[int]] = {}
+
+        self.prefetch_enabled = bool(prefetch)
+        self._worker: Optional[threading.Thread] = None
+        self._queue: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+        self._ready: list = []      # [(l, e, device arrays)]
+        self._errors: list = []     # [(l, e, repr(exc))]
+        self._inflight: Set[tuple] = set()
+        self.reset_stats()
+
+    # -- stats ----------------------------------------------------------
+    def reset_stats(self) -> None:
+        self.stats = {k: 0 for k in
+                      ("hit", "miss", "prefetch_hit", "prefetch_issued",
+                       "prefetch_installed", "prefetch_error", "evict",
+                       "fetch", "sync_fetch", "bytes_fetched", "replay",
+                       "steps")}
+        self.stall_s = 0.0
+
+    def _count(self, key: str, n: int = 1) -> None:
+        RESIDENCY_COUNTS[key] += n
+        self.stats[key] = self.stats.get(key, 0) + n
+
+    def snapshot(self) -> dict:
+        """Health/benchmark view: counters + sizing + derived rates."""
+        s = dict(self.stats)
+        looks = s["hit"] + s["prefetch_hit"] + s["miss"]
+        s.update(
+            capacity=self.capacity, slots_allocated=self.c_alloc,
+            layers=self.n_layers, experts=self.n_experts,
+            bytes_per_expert=self.bytes_per_expert,
+            stall_s=round(self.stall_s, 6),
+            stall_per_miss_ms=round(1e3 * self.stall_s / max(s["miss"], 1),
+                                    4),
+            hit_rate=(round((s["hit"] + s["prefetch_hit"]) / looks, 4)
+                      if looks else None),
+            prefetch_hit_rate=(round(s["prefetch_hit"] / looks, 4)
+                               if looks else None),
+            generation=self._gen)
+        return s
+
+    def resident(self, layer: int) -> Dict[int, int]:
+        """{expert: slot} currently cached at ``layer`` (tests/debug)."""
+        return dict(self._where[layer])
+
+    def slot_table(self, layer: int) -> list:
+        """Generation-stamped slot table at ``layer`` (tests/debug)."""
+        return [dataclasses.replace(r) for r in self._slots[layer]]
+
+    # -- integrity ------------------------------------------------------
+    def _verify_backing(self, params, manifest) -> None:
+        """Construction gate: the expert planes about to back the cache
+        must re-hash to their pack-time manifest digests."""
+        from repro.core import integrity as _integrity
+        t0 = time.perf_counter()
+        corrupt, checked, hashed = [], 0, 0
+        for name, arr in _integrity._iter_plane_leaves(params):
+            if "'experts'" not in name:
+                continue
+            entry = manifest["leaves"].get(name)
+            if entry is None:
+                corrupt.append((name, "-", "leaf absent from manifest"))
+                continue
+            hashed += _integrity._check_plane(
+                name, _integrity._plane_tag(name), arr, entry, "full",
+                corrupt)
+            checked += 1
+        report = IntegrityReport("residency-init", not corrupt, corrupt,
+                                 checked, hashed,
+                                 time.perf_counter() - t0)
+        if not report.ok:
+            raise IntegrityError(report)
+
+    def _verify_slice(self, l: int, e: int, arrs) -> None:
+        t0 = time.perf_counter()
+        corrupt, hashed = [], 0
+        for (k, pl), a in arrs.items():
+            u8 = np.ascontiguousarray(a).reshape(-1).view(np.uint8)
+            hashed += u8.size
+            got = zlib.crc32(u8) & 0xFFFFFFFF
+            want = self._slice_crc[(l, e, k, pl)]
+            if got != want:
+                corrupt.append(
+                    (f"blocks.moe.experts.{k}[layer {l}, expert {e}]", pl,
+                     f"crc32 {got:#010x} != recorded {want:#010x} at "
+                     f"fetch time"))
+        if corrupt:
+            raise IntegrityError(IntegrityReport(
+                "fetch", False, corrupt, len(arrs), hashed,
+                time.perf_counter() - t0))
+
+    # -- device tree ----------------------------------------------------
+    def check_params(self, params) -> None:
+        """Tiered closures serve from the manager's spliced tree; the
+        caller-passed params must be the tree this manager was built on
+        (anything else would silently serve different weights)."""
+        if params is not None and params is not self._source_params:
+            raise ResidencyError(
+                "params passed to a tiered serve fn are not the tree this "
+                "ResidencyManager was built from — build the manager from "
+                "the same ServeState you serve")
+
+    def device_params(self):
+        """The served param tree (cache stacks + current residency maps)."""
+        if self._maps_dirty:
+            soe = np.full((self.n_layers, self.n_experts), self.c_alloc,
+                          np.int32)
+            eos = np.full((self.n_layers, self.c_alloc), self.n_experts,
+                          np.int32)
+            for l, recs in enumerate(self._slots):
+                for s, r in enumerate(recs):
+                    if r.expert >= 0:
+                        soe[l, r.expert] = s
+                        eos[l, s] = r.expert
+            self._res_maps["slot_of_expert"] = jnp.asarray(soe)
+            self._res_maps["expert_of_slot"] = jnp.asarray(eos)
+            self._maps_dirty = False
+        return self._dp
+
+    # -- slot mechanics -------------------------------------------------
+    def _tick(self) -> int:
+        self._ticks += 1
+        return self._ticks
+
+    def _find(self, l: int, e: int) -> Optional[int]:
+        return self._where[l].get(int(e))
+
+    def _touch(self, rec: _SlotRec) -> None:
+        rec.last_used = self._tick()
+
+    def _fetch(self, l: int, e: int):
+        """Slice one expert off the backing store, verify, move to device."""
+        arrs = {(k, pl): np.ascontiguousarray(self._host[k][pl][l, e])
+                for k in _EXPERT_KEYS for pl in _PLANES}
+        self._verify_slice(l, e, arrs)
+        dev = _transfer(arrs)
+        nbytes = sum(a.nbytes for a in arrs.values())
+        self._count("fetch")
+        self._count("bytes_fetched", nbytes)
+        return dev
+
+    def _install(self, l: int, e: int, dev, source: str,
+                 protected: Set[int]) -> int:
+        """Place fetched planes into a slot at layer ``l``: vacant first,
+        else evict the LRU slot whose expert is not ``protected``."""
+        recs = self._slots[l]
+        slot = next((i for i, r in enumerate(recs) if r.expert < 0), None)
+        if slot is None:
+            cands = [(r.last_used, i) for i, r in enumerate(recs)
+                     if r.expert not in protected]
+            if not cands:
+                self._grow(1)
+                recs = self._slots[l]
+                slot = len(recs) - 1
+            else:
+                slot = min(cands)[1]
+                self._count("evict")
+                self._where[l].pop(recs[slot].expert, None)
+        li, si = jnp.int32(l), jnp.int32(slot)
+        for k in _EXPERT_KEYS:
+            stack = self._stacks[k]
+            for pl in _PLANES:
+                setattr(stack, pl,
+                        _slot_set(getattr(stack, pl), li, si, dev[(k, pl)]))
+        self._gen += 1
+        recs[slot] = _SlotRec(expert=int(e), last_used=self._tick(),
+                              gen=self._gen, source=source,
+                              fresh=(source == "prefetch"))
+        self._where[l][int(e)] = slot
+        self._maps_dirty = True
+        return slot
+
+    def _grow(self, extra: int) -> None:
+        """Transiently widen the cache (a step's working set may exceed
+        the retained capacity); commit trims back via :meth:`_trim`."""
+        for k in _EXPERT_KEYS:
+            stack = self._stacks[k]
+            for pl in _PLANES:
+                plane = getattr(stack, pl)
+                pad = jnp.zeros(
+                    (self.n_layers, extra) + tuple(plane.shape[2:]),
+                    plane.dtype)
+                setattr(stack, pl, jnp.concatenate([plane, pad], axis=1))
+        for recs in self._slots:
+            recs.extend(_SlotRec() for _ in range(extra))
+        self.c_alloc += extra
+        self._maps_dirty = True
+
+    def _trim(self) -> None:
+        """Compact back to ``capacity`` slots, keeping the most recently
+        used experts per layer (the LRU tail is evicted)."""
+        if self.c_alloc <= self.capacity:
+            return
+        keep = np.zeros((self.n_layers, self.capacity), np.int64)
+        new_slots: List[List[_SlotRec]] = []
+        for l, recs in enumerate(self._slots):
+            order = sorted(range(len(recs)),
+                           key=lambda i: (recs[i].expert < 0,
+                                          -recs[i].last_used, i))
+            kept, dropped = order[:self.capacity], order[self.capacity:]
+            for i in dropped:
+                if recs[i].expert >= 0:
+                    self._count("evict")
+            keep[l] = kept
+            new_slots.append([recs[i] for i in kept])
+        idx = jnp.asarray(keep)
+        for k in _EXPERT_KEYS:
+            stack = self._stacks[k]
+            for pl in _PLANES:
+                setattr(stack, pl, _gather_slots(getattr(stack, pl), idx))
+        self._slots = new_slots
+        self._where = [{r.expert: s for s, r in enumerate(recs)
+                        if r.expert >= 0} for recs in new_slots]
+        self.c_alloc = self.capacity
+        self._maps_dirty = True
+
+    # -- prefetch -------------------------------------------------------
+    def _start_worker(self) -> None:
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._work, daemon=True,
+                                            name="residency-prefetch")
+            self._worker.start()
+
+    def _work(self) -> None:
+        while True:
+            item = self._queue.get()
+            if item is None:
+                self._queue.task_done()
+                return
+            l, e = item
+            try:
+                arrs = {(k, pl):
+                        np.ascontiguousarray(self._host[k][pl][l, e])
+                        for k in _EXPERT_KEYS for pl in _PLANES}
+                self._verify_slice(l, e, arrs)
+                dev = _transfer(arrs)
+                with self._lock:
+                    self._ready.append((l, e, dev,
+                                        sum(a.nbytes
+                                            for a in arrs.values())))
+            except Exception as exc:   # swallowed: a failed prefetch just
+                with self._lock:       # becomes a later (loud) demand miss
+                    self._errors.append((l, e, repr(exc)))
+            finally:
+                self._queue.task_done()
+
+    def close(self) -> None:
+        """Stop the prefetch worker (daemon thread — optional)."""
+        if self._worker is not None and self._worker.is_alive():
+            self._queue.put(None)
+            self._queue.join()
+
+    def join_prefetches(self) -> None:
+        """Wait out in-flight prefetches and install what landed — called
+        at the top of every :meth:`run`, so installs are deterministic
+        with respect to the step sequence (the async overlap happens
+        *between* steps)."""
+        if self._worker is None:
+            return
+        self._queue.join()
+        with self._lock:
+            ready, self._ready = self._ready, []
+            errors, self._errors = self._errors, []
+        for l, e, _ in errors:
+            self._count("prefetch_error")
+            self._inflight.discard((l, e))
+        for l, e, dev, nbytes in ready:
+            self._inflight.discard((l, e))
+            if self._find(l, e) is not None:
+                continue               # raced with a demand fetch
+            self._count("fetch")
+            self._count("bytes_fetched", nbytes)
+            self._install(l, e, dev, "prefetch",
+                          protected=self._last_needed.get(l, set()))
+            self._count("prefetch_installed")
+
+    def _issue_prefetches(self, needed: Sequence[Set[int]]) -> None:
+        """Routing-aware prediction: layer l-1's observed routing
+        prefetches layer l one layer ahead (decode: the previous token's
+        logits; scheduler: the previous tick's routing), plus temporal
+        locality on the layer's own hot set (already resident → no-op)."""
+        for l in range(self.n_layers):
+            pred: Set[int] = set()
+            if l < len(needed):
+                pred |= needed[l]
+            if 0 < l and l - 1 < len(needed):
+                pred |= needed[l - 1]
+            for e in sorted(pred):
+                if self._find(l, e) is None \
+                        and (l, e) not in self._inflight:
+                    self._inflight.add((l, e))
+                    self._count("prefetch_issued")
+                    self._start_worker()
+                    self._queue.put((l, e))
+
+    # -- the protocol ---------------------------------------------------
+    def _ensure(self, needed: Sequence[Set[int]],
+                counted: Optional[set] = None) -> None:
+        """Account hits and synchronously fetch misses for ``needed``
+        (a per-layer sequence of expert-id sets); ``counted`` dedupes
+        accounting across replay passes of one step."""
+        counted = set() if counted is None else counted
+        worst = max((len(exps) for exps in needed), default=0)
+        if worst > self.c_alloc:
+            self._grow(worst - self.c_alloc)
+        for l, exps in enumerate(needed):
+            for e in sorted(int(x) for x in exps):
+                slot = self._find(l, e)
+                if slot is not None:
+                    rec = self._slots[l][slot]
+                    if (l, e) not in counted:
+                        counted.add((l, e))
+                        if rec.fresh and rec.source == "prefetch":
+                            self._count("prefetch_hit")
+                        else:
+                            self._count("hit")
+                    rec.fresh = False
+                    self._touch(rec)
+                else:
+                    if (l, e) not in counted:
+                        counted.add((l, e))
+                        self._count("miss")
+                    self._count("sync_fetch")
+                    t0 = time.perf_counter()
+                    dev = self._fetch(l, e)
+                    s = self._install(l, e, dev, "demand", protected=exps)
+                    self.stall_s += time.perf_counter() - t0
+                    rec = self._slots[l][s]
+                    rec.fresh = False
+                    self._touch(rec)
+
+    def _commit(self, needed: Sequence[Set[int]]) -> None:
+        self.stats["steps"] += 1
+        self._trim()
+        self._last_needed = {l: set(exps) for l, exps in enumerate(needed)}
+        if self.prefetch_enabled:
+            self._issue_prefetches(needed)
+
+    def _needed(self, routing: np.ndarray, active) -> List[Set[int]]:
+        """Per-layer routed-expert sets from a (L, n_tok, k) routing
+        tensor, keeping only rows of ``active`` slots when given."""
+        r = np.asarray(routing)
+        lm = r.shape[0]
+        r = r.reshape(lm, -1, r.shape[-1])
+        if active is not None:
+            act = np.asarray(active, bool).reshape(-1)
+            if act.size and r.shape[1] % act.size == 0:
+                per = r.shape[1] // act.size
+                r = r.reshape(lm, act.size, per, r.shape[-1])[:, act]
+                r = r.reshape(lm, -1, routing.shape[-1])
+            if not act.any():
+                return [set() for _ in range(lm)]
+        return [set(np.unique(r[l]).tolist()) if r[l].size else set()
+                for l in range(lm)]
+
+    def step(self, needed: Sequence) -> None:
+        """Trace-driven tick: make ``needed`` (per-layer expert-id
+        iterables) resident, commit, prefetch — the replayable form of
+        :meth:`run` used by tests and trace benchmarks."""
+        self.join_prefetches()
+        needed = [set(int(e) for e in exps) for exps in needed]
+        self._ensure(needed)
+        self._commit(needed)
+
+    def run(self, launch, *, active=None):
+        """Execute one jitted serve step under the fetch/replay protocol.
+
+        ``launch(device_params) -> (out, routing)`` must be pure in its
+        inputs (replayed outputs are discarded — jitted serve steps
+        qualify; callers must not commit side state from a replayed
+        pass).  ``active``: optional (B,) bool mask — only active slots'
+        routing drives fetches (inactive scheduler slots compute garbage
+        that is masked out of storage).  Returns ``out`` from the first
+        fully-resident pass; raises on non-convergence (> n_layers
+        replays means routing never stabilised, which the trusted-prefix
+        argument rules out for pure launches).
+        """
+        self.join_prefetches()
+        counted: set = set()
+        for _ in range(self.n_layers + 1):
+            out, routing = launch(self.device_params())
+            needed = self._needed(np.asarray(routing), active)
+            missing = [(l, e) for l, exps in enumerate(needed)
+                       for e in exps if self._find(l, int(e)) is None]
+            if not missing:
+                self._ensure(needed, counted)
+                self._commit(needed)
+                return out
+            # routing is only trustworthy up to the first missing layer —
+            # deeper layers saw zero rows where this layer's experts
+            # should have fired.  Fetch the trusted prefix and replay.
+            first = min(l for l, _ in missing)
+            self._count("replay")
+            self._ensure(needed[:first + 1], counted)
+        raise ResidencyError(
+            f"fetch/replay did not converge after {self.n_layers + 1} "
+            f"passes — launch is not pure in the served params")
+
+
+# ---------------------------------------------------------------------------
+# Tiered serve fns (engine-compatible closures over the manager).
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _routed_step_fns(cfg):
+    """Jitted (prefill, decode_step) that also return per-layer routing;
+    cached per cfg so degradation-ladder rungs re-trace under their own
+    suffixed configs, exactly like ``engine._jitted_serve_fns``."""
+    prefill, decode_step = _engine._raw_serve_fns(cfg, routing=True)
+    return jax.jit(prefill), jax.jit(decode_step)
+
+
+def make_tiered_serve_fns(ctx):
+    """(prefill, decode_step) with the standard engine signatures, each
+    step routed through ``ctx.residency``'s fetch/replay protocol.  The
+    closures serve from the manager's spliced tree (C-slot cache stacks +
+    residency maps); the caller-passed params must be the tree the
+    manager was built from.  Always jitted inside; mesh-less only."""
+    mgr = ctx.residency
+    if mgr is None:
+        raise ResidencyError("ctx.residency is None — use "
+                             "engine.make_serve_fns for resident serving")
+    if ctx.mesh is not None:
+        raise ResidencyError("tiered residency is single-device (the HBM "
+                             "cache is per-process) — mesh must be None")
+    jp, jd = _routed_step_fns(ctx.cfg)
+
+    def prefill(params, lut, batch, caches):
+        mgr.check_params(params)
+
+        def launch(dp):
+            logits, new_caches, eids = jp(dp, lut, batch, caches)
+            return (logits, new_caches), eids
+
+        return mgr.run(launch)
+
+    def decode_step(params, lut, token, caches, pos):
+        mgr.check_params(params)
+
+        def launch(dp):
+            logits, new_caches, eids = jd(dp, lut, token, caches, pos)
+            return (logits, new_caches), eids
+
+        return mgr.run(launch)
+
+    return prefill, decode_step
+
+
+def tiered_generate(params, cfg, tokens, *, ctx, max_new: int = 16,
+                    max_len: Optional[int] = None, temperature: float = 0.0,
+                    key=None, embeds=None):
+    """One-shot generation under tiered residency — the host-stepped
+    mirror of ``engine.generate``'s scan loop (same prefill shape, same
+    ``sample_tokens`` rule, same per-step key splits), bitwise-equal to
+    it at any cache capacity because every committed step saw all its
+    routed experts resident (see module docstring / apply_moe)."""
+    mgr = ctx.residency
+    lut = ctx.lut
+    if max_new <= 0:
+        return tokens
+    b, t0 = tokens.shape
+    extra = embeds.shape[1] if embeds is not None else 0
+    max_len = max_len or (t0 + extra + max_new)
+    caches = LM.init_caches(cfg, b, max_len)
+    use_ctx = ctx if ctx.cfg is cfg else ctx.with_cfg(cfg)
+    prefill, decode_step = make_tiered_serve_fns(use_ctx)
+    logits, caches = prefill(params, lut,
+                             {"tokens": tokens, "embeds": embeds}, caches)
+    tok0 = _engine.sample_tokens(logits, 0.0)[:, None].astype(tokens.dtype)
+    if max_new <= 1:
+        return jnp.concatenate([tokens, tok0], axis=1)
+    temperature = float(temperature)
+    sample = temperature > 0 and key is not None
+    outs = [tok0]
+    tok, pos = tok0, t0 + extra
+    for _ in range(max_new - 1):
+        logits, caches = decode_step(params, lut, tok, caches,
+                                     jnp.asarray(pos, jnp.int32))
+        if sample:
+            key, sub = jax.random.split(key)
+            nxt = _engine.sample_tokens(
+                logits, temperature, sub)[:, None].astype(tok.dtype)
+        else:
+            nxt = _engine.sample_tokens(logits, 0.0)[:, None].astype(
+                tok.dtype)
+        outs.append(nxt)
+        tok, pos = nxt, pos + 1
+    return jnp.concatenate([tokens] + outs, axis=1)
+
+
+@partial(jax.jit, static_argnums=(0, 1, 2))
+def _tiered_generate_step(cfg, mesh, page_size: int, params, lut, pages,
+                          page_table, tok, pos, active, temp, keys):
+    """The scheduler's ``_generate_step`` with routing threaded out —
+    identical paged view / sampling / write-token body, so per-request
+    outputs stay bitwise-equal to the resident scheduler (and transitively
+    to one-shot ``generate``).  Returns (pages, next tokens, routing)."""
+    from repro.serve.kv_cache import paged_view, write_token
+    _engine.TRACE_COUNTS["generate_step"] += 1
+    _, decode_step = _engine._raw_serve_fns(cfg, routing=True)
+    with _engine._mesh_ctx(mesh):
+        view = paged_view(cfg, pages, page_table)
+        logits, new_view, routing = decode_step(params, lut, tok, view, pos)
+        subs = jax.vmap(jax.random.fold_in)(keys, pos)
+        nxt = _engine.sample_tokens(logits, temp, subs)
+        pages = write_token(cfg, page_size, pages, new_view, page_table,
+                            pos, active)
+    return pages, nxt, routing

@@ -106,11 +106,11 @@ def _generate(params, cfg, tokens, **kw):
     return _engine.generate(params, cfg, tokens, **kw)
 
 
-def _prefill(cfg, mesh, params, lut, batch, caches):
+def _prefill(cfg, mesh, params, lut, batch, caches, residency=None):
     """Seam mirroring :func:`_generate` for the prefill path."""
     from repro.serve.context import ServeContext
     prefill, _ = _engine.make_serve_fns(
-        ctx=ServeContext(cfg=cfg, mesh=mesh, lut=lut))
+        ctx=ServeContext(cfg=cfg, mesh=mesh, lut=lut, residency=residency))
     return prefill(params, lut, batch, caches)
 
 
@@ -124,10 +124,19 @@ class ResilientEngine:
     """
 
     def __init__(self, cfg, state, *, policy: ResiliencePolicy | None = None,
-                 mesh=None):
+                 mesh=None, residency=None):
         self.cfg = cfg
         self.state = state
         self.mesh = mesh
+        # Optional serve.residency.ResidencyManager: tiered expert
+        # residency (host-RAM backing + HBM cache).  Threaded into every
+        # ServeContext this engine builds, so one cache serves generate,
+        # the scheduler, and every degradation-ladder rung; fetch faults
+        # raise JaxRuntimeError host-side and walk the same ladder.
+        self.residency = residency
+        if residency is not None and mesh is not None:
+            raise ValueError("tiered residency is single-device — "
+                             "mesh must be None")
         self.policy = policy or ResiliencePolicy()
         self.verify_report = None
         self.invariant_report = None
@@ -244,7 +253,8 @@ class ResilientEngine:
         def make_call(rung):
             cfg = self._rung_cfg(rung)
             ctx = ServeContext(cfg=cfg, mesh=self.mesh, lut=self.state.lut,
-                               verify=self.policy.verify)
+                               verify=self.policy.verify,
+                               residency=self.residency)
             return lambda: _generate(self.state.params, cfg, tokens,
                                      ctx=ctx, max_new=max_new,
                                      max_len=max_len,
@@ -256,7 +266,8 @@ class ResilientEngine:
         def make_call(rung):
             cfg = self._rung_cfg(rung)
             return lambda: _prefill(cfg, self.mesh, self.state.params,
-                                    self.state.lut, batch, caches)
+                                    self.state.lut, batch, caches,
+                                    residency=self.residency)
         return self._with_ladder(make_call, deadline_s=deadline_s)
 
     def _guard(self, call, kind: str):
@@ -278,13 +289,16 @@ class ResilientEngine:
         from repro.serve.context import ServeContext
         from repro.serve import scheduler as _sched
         ctx = ServeContext(cfg=self.cfg, mesh=self.mesh, lut=self.state.lut,
-                           verify=self.policy.verify)
+                           verify=self.policy.verify,
+                           residency=self.residency)
         return _sched.Engine(ctx, self.state.params, guard=self._guard,
                              **engine_kw)
 
     def health(self) -> dict:
-        """Snapshot for operators/CI: verify + probe counters + last rung."""
-        return {
+        """Snapshot for operators/CI: verify + probe counters + last rung.
+        Under tiered residency, includes the manager's hit/miss/prefetch/
+        eviction/bytes-fetched snapshot alongside the fallback counters."""
+        out = {
             "requests": self.requests,
             "last_rung": self.last_rung,
             "fallbacks": dict(FALLBACK_COUNTS),
@@ -295,3 +309,6 @@ class ResilientEngine:
                            if self.invariant_report else None),
             "recent_errors": self._history[-8:],
         }
+        if self.residency is not None:
+            out["residency"] = self.residency.snapshot()
+        return out

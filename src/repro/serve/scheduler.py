@@ -249,11 +249,18 @@ class Engine:
 
     def reset_stats(self) -> None:
         """Zero the lifecycle counters (benchmarks call this after a
-        warmup drain so the measured trace starts clean)."""
+        warmup drain so the measured trace starts clean).  Under tiered
+        residency, the manager's fetch/hit counters and the module-wide
+        ``RESIDENCY_COUNTS`` probe reset too."""
         self.stats = {"admitted": 0, "joined_mid_decode": 0,
                       "occupancy": [], "shed": 0, "expired": 0,
                       "preempted": 0, "quarantined": 0, "resumed": 0,
                       "queue_peak": 0}
+        mgr = getattr(self.ctx, "residency", None)
+        if mgr is not None:
+            from repro.serve.residency import RESIDENCY_COUNTS
+            RESIDENCY_COUNTS.clear()
+            mgr.reset_stats()
 
     # -- public API ----------------------------------------------------
     def submit(self, request: Request) -> int:
@@ -333,7 +340,7 @@ class Engine:
 
     def health(self) -> dict:
         occ = self.stats["occupancy"]
-        return {
+        out = {
             "steps": self.steps,
             "queued": len(self._queue),
             "queue_peak": self.stats["queue_peak"],
@@ -350,6 +357,10 @@ class Engine:
             "quarantined": self.stats["quarantined"],
             "resumed": self.stats["resumed"],
         }
+        mgr = getattr(self.ctx, "residency", None)
+        if mgr is not None:
+            out["residency"] = mgr.snapshot()
+        return out
 
     # -- overload internals --------------------------------------------
     def _shed(self, p: _Pending) -> None:
@@ -532,7 +543,28 @@ class Engine:
         pt = jnp.asarray(self.pool.page_table)
 
         def call_with(mask):
+            mgr = getattr(self.ctx, "residency", None)
+
             def call(cfg):
+                if mgr is not None:
+                    # tiered residency: run the routed twin of the step
+                    # under the fetch/replay protocol.  Only active
+                    # slots' routing drives fetches; the launch is pure
+                    # (pages are returned, not committed), so replays
+                    # are safe and parity holds per decode tick.
+                    from repro.serve import residency as _res
+                    mgr.check_params(self.params)
+
+                    def launch(dp):
+                        pages_, nxt_, routing = _res._tiered_generate_step(
+                            cfg, self.ctx.mesh, self.pool.page_size, dp,
+                            self.ctx.lut, self.pool.pages, pt,
+                            jnp.asarray(tok), jnp.asarray(pos),
+                            jnp.asarray(mask), jnp.asarray(temp),
+                            jnp.asarray(keys))
+                        return (pages_, nxt_), routing
+
+                    return mgr.run(launch, active=mask)
                 return _generate_step(
                     cfg, self.ctx.mesh, self.pool.page_size, self.params,
                     self.ctx.lut, self.pool.pages, pt, jnp.asarray(tok),

@@ -32,6 +32,11 @@ actually sees:
     isolate it.  ``alloc_failure(times)`` injects page-pool exhaustion
     at the KV-pool alloc seam, driving the preempt/requeue path without
     having to construct an overcommitted pool.
+  * **Residency faults** — ``fetch_fault(times, delay_s)`` breaks (or,
+    with a delay, slows) ``serve.residency._transfer``, the host→HBM
+    expert-fetch seam of the tiered-residency cache; a persistent fault
+    turns every cache miss into a ladder-walked refusal, proving a
+    miss-storm can never hang the scheduler.
 
 Seeded via ``REPRO_FAULT_SEED`` (CI's fault-injection job varies it) so
 bit positions differ across runs without losing reproducibility.
@@ -42,6 +47,7 @@ import contextlib
 import dataclasses
 import itertools
 import os
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -221,6 +227,47 @@ class FaultInjector:
             except Exception:
                 pass
             _dispatch.runtime_tokens.clear()
+
+    # -- residency faults ----------------------------------------------
+    @contextlib.contextmanager
+    def fetch_fault(self, times: int = 1, delay_s: float = 0.0,
+                    message: str = "injected fetch fault"):
+        """Break or slow the host→HBM expert transfer link.
+
+        Patches ``serve.residency._transfer`` — the one seam every demand
+        fetch and prefetch crosses — to raise ``JaxRuntimeError`` for its
+        first ``times`` crossings (or, with ``delay_s`` > 0, to sleep
+        before delegating: a saturated link rather than a dead one).
+        Demand-fetch faults propagate out of ``ResidencyManager.run`` and
+        walk the degradation ladder like any device fault; prefetch-
+        worker faults are swallowed into ``prefetch_error`` counts and
+        re-surface as later demand misses.  A miss-storm under a
+        persistent fault (``times`` huge) must therefore end as refused
+        requests via ladder exhaustion/quarantine — never a hang.  Yields
+        a :class:`FaultProbe` counting the injected crossings.
+        """
+        from repro.serve import residency as _res
+
+        orig = _res._transfer
+        counter = itertools.count()
+        probe = FaultProbe()
+
+        def wrapped(arrays):
+            n = next(counter)
+            if n < times:
+                probe.executions += 1
+                if delay_s > 0:
+                    time.sleep(delay_s)
+                    return orig(arrays)
+                raise jax.errors.JaxRuntimeError(
+                    f"{message} (transfer {n + 1} of {times})")
+            return orig(arrays)
+
+        _res._transfer = wrapped
+        try:
+            yield probe
+        finally:
+            _res._transfer = orig
 
     # -- scheduler faults ----------------------------------------------
     @contextlib.contextmanager

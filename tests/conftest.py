@@ -31,15 +31,16 @@ def key():
 def _reset_probe_counters():
     """The trace-time probes (``ops.DISPATCH_COUNTS``,
     ``engine.TRACE_COUNTS``, ``layers.MATERIALIZE_COUNTS``,
-    ``resilience.FALLBACK_COUNTS``) are global Counters asserted by tests;
-    reset them between tests so probe assertions can't leak across modules
-    (a prior test's traces otherwise satisfy — or break — a later test's
-    expectations)."""
+    ``resilience.FALLBACK_COUNTS``, ``residency.RESIDENCY_COUNTS``) are
+    global Counters asserted by tests; reset them between tests so probe
+    assertions can't leak across modules (a prior test's traces otherwise
+    satisfy — or break — a later test's expectations)."""
     from repro.kernels import ops
     from repro.models import layers
-    from repro.serve import engine, resilience
+    from repro.serve import engine, residency, resilience
     for counter in (ops.DISPATCH_COUNTS, engine.TRACE_COUNTS,
-                    layers.MATERIALIZE_COUNTS, resilience.FALLBACK_COUNTS):
+                    layers.MATERIALIZE_COUNTS, resilience.FALLBACK_COUNTS,
+                    residency.RESIDENCY_COUNTS):
         counter.clear()
     yield
 

@@ -1,0 +1,280 @@
+"""Tiered expert residency — parity, eviction, prefetch, integrity.
+
+The acceptance contract of ``serve/residency.py``:
+
+  * **Bitwise parity** — with the per-layer HBM cache capacity strictly
+    below the expert count (including capacity 1), ``generate`` and the
+    continuous-batching scheduler trace are bitwise-equal to the fully-
+    resident path: the fetch/replay protocol guarantees every *routed*
+    expert is resident before a step's outputs are committed, and absent
+    experts only ever multiply zero gate rows (see apply_moe).
+  * **No dense fallback** — a cache miss is a synchronous host→HBM fetch
+    of compressed planes, never a dense materialization:
+    ``MATERIALIZE_COUNTS['packed_stacked']`` stays 0 throughout.
+  * **LRU eviction** — slots evict least-recently-used first, touches
+    reorder the queue, and the generation-stamped slot table records
+    install order.
+  * **Routing-aware prefetch** — layer l's observed routing prefetches
+    layer l+1 one layer ahead; first use of a prefetched slot counts
+    ``prefetch_hit`` (nonzero under the deepseek routing trace).
+  * **Integrity at fetch** — a corrupted backing-store plane raises
+    ``IntegrityError`` naming (layer, expert, plane) at fetch time,
+    before the bytes reach a cache slot.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import CompressionPolicy
+from repro.core.integrity import IntegrityError
+from repro.models import layers
+from repro.models import lm as LM
+from repro.serve import residency as res
+from repro.serve.context import ServeContext
+from repro.serve.engine import build_serve_params, generate
+from repro.serve.residency import (RESIDENCY_COUNTS, ResidencyError,
+                                   ResidencyManager)
+from repro.serve.resilience import ResilientEngine
+from repro.serve.scheduler import Request
+
+
+@pytest.fixture(scope="module")
+def served():
+    """(cfg, ServeState, resident ctx) — deepseek smoke, dropless routing
+    (capacity_factor=n_experts) so resident vs tiered parity is exact
+    token-for-token, not merely distributional."""
+    cfg = get_config("deepseek-v2-lite-16b").smoke
+    cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    st = build_serve_params(
+        params, CompressionPolicy(mode="compressed", min_weight_size=1024))
+    return cfg, st, ServeContext.from_state(cfg, st)
+
+
+def _prompt(cfg, n=8, seed=3):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def _tiered_ctx(ctx, mgr):
+    return dataclasses.replace(ctx, residency=mgr)
+
+
+# -- bitwise parity ----------------------------------------------------
+
+def test_generate_parity_at_all_capacities(served):
+    """generate under tiered residency is bitwise-equal to the fully-
+    resident path at capacities {all, half, 1}, without ever
+    materializing dense expert weights; constrained capacities actually
+    exercise miss/replay, and the deepseek routing trace yields a
+    nonzero prefetch-hit rate."""
+    cfg, st, ctx = served
+    prompt = _prompt(cfg)[None, :]
+    ref = np.asarray(generate(st.params, cfg, prompt, ctx=ctx,
+                              max_new=8, max_len=32))
+    assert layers.MATERIALIZE_COUNTS["packed_stacked"] == 0
+    for cap in (cfg.n_experts, cfg.n_experts // 2, 1):
+        RESIDENCY_COUNTS.clear()
+        mgr = ResidencyManager(st, cfg, capacity=cap)
+        out = np.asarray(generate(st.params, cfg, prompt,
+                                  ctx=_tiered_ctx(ctx, mgr),
+                                  max_new=8, max_len=32))
+        assert np.array_equal(out, ref), f"parity broke at capacity {cap}"
+        assert layers.MATERIALIZE_COUNTS["packed_stacked"] == 0
+        if cap < cfg.n_experts:
+            assert RESIDENCY_COUNTS["miss"] > 0
+            assert RESIDENCY_COUNTS["replay"] > 0
+            assert RESIDENCY_COUNTS["prefetch_hit"] > 0
+        assert RESIDENCY_COUNTS["sync_fetch"] >= RESIDENCY_COUNTS["miss"]
+        assert RESIDENCY_COUNTS["bytes_fetched"] > 0
+
+
+def test_generate_parity_sampled(served):
+    """Temperature sampling splits the PRNG identically in the tiered
+    host loop and the resident scan — same keys, same tokens."""
+    cfg, st, ctx = served
+    prompt = _prompt(cfg, seed=11)[None, :]
+    key = jax.random.PRNGKey(42)
+    ref = np.asarray(generate(st.params, cfg, prompt, ctx=ctx, max_new=6,
+                              max_len=32, temperature=0.8, key=key))
+    mgr = ResidencyManager(st, cfg, capacity=2)
+    out = np.asarray(generate(st.params, cfg, prompt,
+                              ctx=_tiered_ctx(ctx, mgr), max_new=6,
+                              max_len=32, temperature=0.8, key=key))
+    assert np.array_equal(out, ref)
+
+
+def test_scheduler_trace_parity(served):
+    """A mixed staggered trace through the continuous-batching scheduler
+    under tiered residency finishes bitwise-equal to the resident
+    scheduler serving the identical trace."""
+    cfg, st, ctx = served
+    rng = np.random.RandomState(17)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           int(rng.randint(4, 10))).astype(np.int32)
+               for _ in range(4)]
+
+    def run_trace(residency):
+        eng = ResilientEngine(cfg, st, residency=residency).scheduler(
+            n_slots=2, max_len=32, page_size=8)
+        for i, p in enumerate(prompts):      # > n_slots: queue + join
+            eng.submit(Request(tokens=p, max_new=6, rid=i))
+            eng.step()
+        done = {c.rid: c for c in eng.drain() + eng.completions}
+        return [np.asarray(done[i].tokens) for i in range(len(prompts))]
+
+    ref = run_trace(None)
+    got = run_trace(ResidencyManager(st, cfg, capacity=3))
+    for i, (r, g) in enumerate(zip(ref, got)):
+        assert np.array_equal(r, g), f"scheduler trace diverged at rid {i}"
+    assert layers.MATERIALIZE_COUNTS["packed_stacked"] == 0
+
+
+# -- cache mechanics ---------------------------------------------------
+
+def test_lru_eviction_order(served):
+    """Vacant slots fill first; evictions then pick the least recently
+    *used* expert — a touch (cache hit) reorders the LRU queue."""
+    cfg, st, ctx = served
+    mgr = ResidencyManager(st, cfg, capacity=2, prefetch=False)
+    tail = [set()] * (mgr.n_layers - 1)
+    mgr.step([{0}] + tail)
+    mgr.step([{1}] + tail)
+    assert set(mgr.resident(0)) == {0, 1}
+    mgr.step([{0}] + tail)              # touch 0: LRU is now 1
+    mgr.step([{2}] + tail)              # evicts 1, not 0
+    assert set(mgr.resident(0)) == {0, 2}
+    assert RESIDENCY_COUNTS["evict"] == 1
+    # generation stamps record install order: 2 is the newest slot
+    gens = {r.expert: r.gen for r in mgr.slot_table(0) if r.expert >= 0}
+    assert gens[2] > gens[0]
+
+
+def test_transient_overflow_trims_back(served):
+    """A single step's working set may exceed capacity (capacity 1,
+    top-k routing): the cache grows for the step and trims back to
+    capacity at commit, evicting LRU-first."""
+    cfg, st, ctx = served
+    mgr = ResidencyManager(st, cfg, capacity=1, prefetch=False)
+    tail = [set()] * (mgr.n_layers - 1)
+    mgr.step([{3, 4, 5}] + tail)
+    assert mgr.c_alloc == 1              # trimmed back after commit
+    assert len(mgr.resident(0)) == 1
+    assert RESIDENCY_COUNTS["evict"] == 2
+
+
+def test_prefetch_hit_accounting(served):
+    """Layer l's routing prefetches layer l+1 one layer ahead; the next
+    step's first touch of those slots counts prefetch_hit, not hit."""
+    cfg, st, ctx = served
+    assert cfg.n_experts >= 4
+    mgr = ResidencyManager(st, cfg, capacity=cfg.n_experts)
+    tail = [set()] * (mgr.n_layers - 1)
+    mgr.step([{1, 2}] + tail)            # predicts {1, 2} at layer 1
+    before = RESIDENCY_COUNTS["prefetch_hit"]
+    mgr.step([set(), {1, 2}] + tail[1:])
+    assert RESIDENCY_COUNTS["prefetch_hit"] - before == 2
+    assert RESIDENCY_COUNTS["prefetch_issued"] >= 2
+    assert RESIDENCY_COUNTS["prefetch_installed"] >= 2
+    # second touch of the same slots is a plain hit
+    before_hit = RESIDENCY_COUNTS["hit"]
+    mgr.step([set(), {1, 2}] + tail[1:])
+    assert RESIDENCY_COUNTS["hit"] - before_hit == 2
+
+
+# -- integrity ---------------------------------------------------------
+
+def test_corrupt_backing_plane_caught_at_fetch(served):
+    """Backing-store rot after construction is caught by the per-slice
+    CRC at fetch time, naming (layer, expert, plane) — the corrupt bytes
+    never reach a cache slot."""
+    cfg, st, ctx = served
+    mgr = ResidencyManager(st, cfg, capacity=2, prefetch=False)
+    mgr._host["w_up"]["codes"][1, 5].reshape(-1).view(np.uint8)[0] ^= 0x40
+    tail = [set()] * (mgr.n_layers - 1)
+    mgr.step([{5}] + tail)               # layer 0, expert 5: clean
+    with pytest.raises(IntegrityError) as ei:
+        mgr.step([set(), {5}] + tail[1:])
+    msg = str(ei.value)
+    assert "w_up" in msg and "layer 1" in msg and "expert 5" in msg \
+        and "codes" in msg
+    assert 5 not in mgr.resident(1)
+
+
+def test_manifest_verify_at_init(served):
+    """Construction re-hashes the expert planes against the pack-time
+    manifest — a pre-corrupted state refuses to build a backing store."""
+    cfg, st, ctx = served
+    from repro.testing import FaultInjector
+    bad, leaf = FaultInjector(seed=5).flip_bit(st, "experts", "codes")
+    with pytest.raises(IntegrityError):
+        ResidencyManager(bad, cfg, capacity=2)
+    # verify=False skips the (expensive) init gate; per-fetch CRCs are
+    # recorded from the corrupt planes, so fetches then self-consist.
+    ResidencyManager(bad, cfg, capacity=2, verify=False)
+
+
+# -- wiring ------------------------------------------------------------
+
+def test_residency_rejects_bad_wiring(served):
+    cfg, st, ctx = served
+    dense = get_config("llama3.2-1b").smoke
+    dparams = LM.init_lm(jax.random.PRNGKey(0), dense, jnp.float32)
+    dst = build_serve_params(
+        dparams, CompressionPolicy(mode="compressed", min_weight_size=1024))
+    with pytest.raises(ResidencyError):
+        ResidencyManager(dst, dense, capacity=1)
+    mgr = ResidencyManager(st, cfg, capacity=2)
+    with pytest.raises(ResidencyError):
+        res.make_tiered_serve_fns(
+            dataclasses.replace(ctx, residency=mgr, mesh=object()))
+    # serving a different params tree than the manager was built from
+    prefill, _ = res.make_tiered_serve_fns(_tiered_ctx(ctx, mgr))
+    with pytest.raises(ResidencyError):
+        prefill({"blocks": {}}, st.lut, {"tokens": None, "embeds": None},
+                None)
+
+
+def test_health_and_reset_stats(served):
+    """Engine.health() surfaces the residency snapshot alongside the
+    lifecycle counters; reset_stats() clears RESIDENCY_COUNTS and the
+    manager's counters too."""
+    cfg, st, ctx = served
+    mgr = ResidencyManager(st, cfg, capacity=2)
+    reng = ResilientEngine(cfg, st, residency=mgr)
+    eng = reng.scheduler(n_slots=2, max_len=32, page_size=8)
+    eng.submit(Request(tokens=_prompt(cfg, 6), max_new=4, rid=0))
+    eng.drain()
+    h = eng.health()
+    assert h["residency"]["miss"] > 0
+    assert h["residency"]["bytes_fetched"] > 0
+    assert reng.health()["residency"]["capacity"] == 2
+    eng.reset_stats()
+    assert sum(RESIDENCY_COUNTS.values()) == 0
+    assert eng.health()["residency"]["miss"] == 0
+    assert eng.health()["residency"]["stall_s"] == 0
+
+
+def test_cache_bytes_capacity_and_budget(served):
+    """cache_bytes sizes capacity in whole experts per layer; the
+    core.policy.device_budget helper does the 4-8 GB edge math that
+    launch/serve.py uses to default --expert-cache-mib."""
+    cfg, st, ctx = served
+    probe = ResidencyManager(st, cfg, capacity=1)
+    per = probe.bytes_per_expert
+    mgr = ResidencyManager(st, cfg,
+                           cache_bytes=3 * probe.n_layers * per + 1)
+    assert mgr.capacity == 3
+    from repro.core.policy import device_budget
+    b = device_budget(10 * probe.n_layers * per,
+                      expert_bytes=probe.n_layers * probe.n_experts * per,
+                      resident_bytes=3 * probe.n_layers * per)
+    assert b.cache_experts_per_layer(probe.n_layers, per) == 7
+    assert not b.fully_resident and b.fits
+    assert "tiered" in b.summary()
+    full = device_budget(1 << 40, expert_bytes=1 << 20)
+    assert full.fully_resident

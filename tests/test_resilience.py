@@ -284,3 +284,44 @@ def test_restore_latest_raises_when_nothing_loadable(tmp_path):
     FaultInjector().truncate_step(d, 4)
     with pytest.raises(FileNotFoundError):
         ckpt.restore_latest(d, jax.tree_util.tree_map(jnp.zeros_like, tree))
+
+
+# -- tiered residency under fault --------------------------------------
+
+def test_fetch_fault_miss_storm_refuses_never_hangs(served):
+    """A dead host→HBM transfer link under tiered residency turns every
+    cache miss into a ladder-walked fault: the miss-storm must surface
+    as a refused request (quarantine → finished='refused') within a
+    bounded drain — never a hang or an unaccounted drop."""
+    cfg, st, _, _ = served
+    if cfg.family != "moe":
+        pytest.skip("tiered residency backs MoE expert planes only")
+    from repro.serve.residency import RESIDENCY_COUNTS, ResidencyManager
+    from repro.serve.scheduler import Request
+    mgr = ResidencyManager(st, cfg, capacity=1, prefetch=False)
+    reng = ResilientEngine(cfg, st, residency=mgr)
+    eng = reng.scheduler(n_slots=2, max_len=24, page_size=8)
+    toks = np.arange(1, 7, dtype=np.int32) % cfg.vocab_size
+    with FaultInjector().fetch_fault(times=1 << 30) as probe:
+        eng.submit(Request(tokens=toks, max_new=4, rid=0))
+        done = eng.drain(max_steps=500)
+    assert done and all(c.finished == "refused" for c in done)
+    assert probe.executions > 0
+    assert FALLBACK_COUNTS["refused"] >= 1
+
+
+def test_fetch_fault_transient_recovers_bitwise(served):
+    """A transient transfer fault (first fetch only) retries up the
+    ladder and the request still completes bitwise-equal to the
+    fully-resident reference — fetch faults are recoverable faults,
+    not corruption."""
+    cfg, st, toks, ref = served
+    if cfg.family != "moe":
+        pytest.skip("tiered residency backs MoE expert planes only")
+    from repro.serve.residency import ResidencyManager
+    mgr = ResidencyManager(st, cfg, capacity=cfg.n_experts, prefetch=False)
+    reng = ResilientEngine(cfg, st, residency=mgr)
+    with FaultInjector().fetch_fault(times=1) as probe:
+        out = np.asarray(reng.generate(toks, max_new=4))
+    assert probe.executions == 1
+    assert np.array_equal(out, ref)
