@@ -1,0 +1,287 @@
+"""Memory-pressure benchmark — the governor's reclaim/regrow ladder
+under seeded budget traces.
+
+The deployment regime is a 4–8 GB unified-memory edge device whose HBM
+budget moves at runtime (jetsam-style OS reclaim).  Two traces:
+
+``pressure_sweep`` serves a staggered request mix on the continuous-
+batching engine while ``FaultInjector.memory_pressure`` replays each
+seeded trace kind (step / spike / ramp / oscillate) through the
+``serve.governor._os_pressure`` seam.  Measured per kind:
+
+  * tokens/s over the drain and how far it degrades vs the unpressured
+    baseline;
+  * full accounting — every submission ends as a ``Completion`` with
+    ``finished`` in {eos, max_new, shed, deadline, refused, pressure}
+    (asserted);
+  * survivor parity — every ordinary finisher is bitwise-equal to
+    one-shot ``generate`` (asserted: pressure moves where KV lives and
+    when requests run, never what they compute);
+  * hysteresis damping — ``plan_changes`` and the re-trace count stay
+    bounded by the number of sustained band crossings, never
+    per-signal-flip (asserted: retraces <= 1 + plan_changes).
+
+``reclaim_ladder`` walks all four rungs explicitly on a tiered MoE
+engine (deepseek smoke + ``ResidencyManager``): trim experts -> retire
+KV pages (preempting an in-flight tenant) -> tighten admission ->
+refuse new work, then a full regrow back to the boot plan.  Measured:
+time-to-reclaim per rung (seconds, from ``MemoryGovernor.rung_latency``)
+and the same accounting/parity bars.
+
+``pressure_json`` bundles both into ``BENCH_pressure.json`` for the CI
+artifact trail (see the serving-smoke job).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+import jax
+
+from repro.core.policy import CompressionPolicy, device_budget
+from repro.serve import engine as engine_mod
+from repro.serve.context import ServeContext
+from repro.serve.engine import build_serve_params, generate
+from repro.serve.governor import MemoryGovernor
+from repro.serve.residency import ResidencyManager
+from repro.serve.resilience import FALLBACK_COUNTS, ResilientEngine
+from repro.serve.scheduler import Engine, Request
+from repro.testing import FaultInjector, PRESSURE_KINDS, pressure_trace
+
+from .common import emit, trained_tiny_model
+
+ACCOUNTED = {"eos", "max_new", "shed", "deadline", "refused", "pressure"}
+
+
+def _serve_under_trace(cfg, st, trace, *, seed, n_requests=5):
+    """Serve a staggered request mix while the governor ingests
+    ``trace`` through the patched ``_os_pressure`` seam; returns
+    (summary-dict, governor)."""
+    ctx = ServeContext.from_state(cfg, st)
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           int(rng.randint(4, 10))).astype(np.int32)
+               for _ in range(n_requests)]
+    max_news = rng.randint(4, 8, n_requests)
+    arrivals = np.concatenate(
+        [[0], np.cumsum(rng.poisson(2.0, n_requests - 1))])
+
+    pool_probe = Engine(ctx, st.params, n_slots=3, max_len=16, page_size=8)
+    pn = pool_probe.pool.page_nbytes()
+    boot = pool_probe.pool.n_pages * pn
+    del pool_probe
+    gov = MemoryGovernor(device_budget(boot, expert_bytes=0, kv_bytes=boot))
+    eng = Engine(ctx, st.params, n_slots=3, max_len=16, page_size=8,
+                 governor=gov)
+
+    inj = FaultInjector(seed)
+    t0 = time.perf_counter()
+    submitted = 0
+    ctx_mgr = (inj.memory_pressure(trace, hold_last=True)
+               if trace is not None else None)
+    probe = ctx_mgr.__enter__() if ctx_mgr is not None else None
+    try:
+        while submitted < n_requests or eng.health()["occupied"] \
+                or eng.health()["queued"]:
+            while submitted < n_requests \
+                    and eng.steps >= arrivals[submitted]:
+                eng.submit(Request(tokens=prompts[submitted],
+                                   max_new=int(max_news[submitted]),
+                                   rid=submitted))
+                submitted += 1
+            eng.step()
+    finally:
+        if ctx_mgr is not None:
+            ctx_mgr.__exit__(None, None, None)
+    jax.block_until_ready(eng.pool.pages)
+    wall = time.perf_counter() - t0
+
+    by_rid = {c.rid: c for c in eng.completions}
+    assert set(by_rid) == set(range(n_requests)), "unaccounted request"
+    reasons = {c.rid: c.finished for c in eng.completions}
+    assert all(r in ACCOUNTED for r in reasons.values()), reasons
+    parity_ok = True
+    for i, c in by_rid.items():
+        if c.finished not in ("eos", "max_new"):
+            continue
+        ref = np.asarray(generate(st.params, cfg, prompts[i][None, :],
+                                  ctx=ctx, max_new=int(max_news[i]),
+                                  max_len=eng.pool.max_len))[0]
+        parity_ok &= bool(np.array_equal(ref, c.tokens))
+    assert parity_ok, "survivor output diverged from generate"
+    n_tok = sum(c.n_generated for c in eng.completions)
+    summary = dict(
+        steps=eng.steps, wall_s=wall, tokens=n_tok,
+        tokens_per_s=n_tok / wall, survivor_parity_ok=parity_ok,
+        finished_reasons={r: sum(1 for v in reasons.values() if v == r)
+                          for r in sorted(set(reasons.values()))},
+        plan_changes=gov.plan_changes,
+        polls=(probe.executions if probe is not None else 0),
+        rung_latency_s=dict(gov.rung_latency))
+    eng.close()
+    return summary, gov
+
+
+def pressure_sweep(rows: list | None = None, *,
+                   arch: str = "llama3.2-1b", seed: int = 0,
+                   n_steps: int = 48):
+    """One seeded budget trace per kind; asserts accounting, survivor
+    parity, and the hysteresis retrace bound."""
+    cfg, params, _ = trained_tiny_model(arch, steps=20, seed=seed)
+    st = build_serve_params(params, CompressionPolicy(
+        mode="compressed", min_weight_size=1024))
+    out_rows = rows if rows is not None else []
+
+    # unpressured baseline, fresh trace-cache key
+    cfg0 = dataclasses.replace(cfg, name=cfg.name + "-press-none")
+    base, _ = _serve_under_trace(cfg0, st, None, seed=seed)
+    base["bench"] = "pressure_sweep"
+    base.update(arch=arch, seed=seed, kind="none", retraces=None)
+    out_rows.append(base)
+    emit("pressure.baseline_tokens_per_s", f"{base['tokens_per_s']:.1f}",
+         "no pressure signal")
+
+    probe = Engine(ServeContext.from_state(cfg0, st), st.params,
+                   n_slots=3, max_len=16, page_size=8)
+    pn = probe.pool.page_nbytes()
+    boot = probe.pool.n_pages * pn
+    del probe
+    for kind in PRESSURE_KINDS:
+        kcfg = dataclasses.replace(cfg, name=cfg.name + f"-press-{kind}")
+        trace = pressure_trace(kind, boot_bytes=boot, low_bytes=3 * pn,
+                               n_steps=n_steps, period=4, seed=seed)
+        t_base = engine_mod.TRACE_COUNTS["generate_step"]
+        summary, gov = _serve_under_trace(kcfg, st, trace, seed=seed)
+        retraces = engine_mod.TRACE_COUNTS["generate_step"] - t_base
+        # the hysteresis bar: re-traces track sustained band crossings
+        # (plan changes), never the per-step signal flips
+        assert retraces <= 1 + gov.plan_changes, (retraces,
+                                                  gov.plan_changes)
+        summary["bench"] = "pressure_sweep"
+        summary.update(arch=arch, seed=seed, kind=kind, retraces=retraces,
+                       trace_len=len(trace),
+                       signal_flips=sum(1 for a, b in zip(trace, trace[1:])
+                                        if a != b))
+        out_rows.append(summary)
+        emit(f"pressure.{kind}_tokens_per_s",
+             f"{summary['tokens_per_s']:.1f}",
+             f"plan_changes={gov.plan_changes} retraces={retraces} "
+             f"flips={summary['signal_flips']}")
+    return out_rows
+
+
+def reclaim_ladder(rows: list | None = None, *,
+                   arch: str = "deepseek-v2-lite-16b", seed: int = 0):
+    """Walk every rung once on a tiered MoE engine and time it:
+    trim experts -> retire KV (with preemption) -> tighten -> refuse,
+    then regrow to the boot plan."""
+    cfg, params, _ = trained_tiny_model(arch, steps=20, seed=seed)
+    # dropless routing so survivor parity is token-exact
+    cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts),
+                              name=cfg.name + "-press-ladder")
+    st = build_serve_params(params, CompressionPolicy(
+        mode="compressed", min_weight_size=1024))
+    ctx = ServeContext.from_state(cfg, st)
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(3)]
+    refs = [np.asarray(generate(st.params, cfg, p[None, :], ctx=ctx,
+                                max_new=10, max_len=32))[0]
+            for p in prompts[:2]]
+
+    mgr = ResidencyManager(st, cfg, capacity=3)
+    unit = mgr.n_layers * mgr.bytes_per_expert
+    reng = ResilientEngine(cfg, st, residency=mgr)
+    eng = reng.scheduler(n_slots=2, max_len=32, page_size=8)
+    pn = eng.pool.page_nbytes()
+    kv_boot = eng.pool.n_pages * pn            # 8 pages, 4 per slot
+    boot = 3 * unit + kv_boot
+    gov = MemoryGovernor(device_budget(boot, expert_bytes=3 * unit,
+                                       kv_bytes=kv_boot),
+                         cooldown_steps=2)
+    gov.attach(eng)
+    eng.governor = gov
+    base = {k: FALLBACK_COUNTS[k] for k in
+            ("pressure_trim", "pressure_kv_retire", "pressure_preempt",
+             "pressure_tighten", "pressure_refused", "pressure_regrow")}
+
+    for i, p in enumerate(prompts[:2]):
+        eng.submit(Request(tokens=p, max_new=10, rid=i))
+    eng.step()                                  # both admitted
+    # rung 1: trim the expert cache 3 -> 1
+    gov.set_budget(boot - 2 * unit)
+    eng.step()
+    assert mgr.capacity == 1 and not mgr.prefetch_enabled
+    # rung 2+3: retire half the KV pool; both slots are occupied, so the
+    # governor must preempt one tenant; one backed slot left -> tighten
+    gov.set_budget(unit + 4 * pn)
+    eng.step()
+    assert eng.pool.n_pages_usable == 4, eng.pool.n_pages_usable
+    assert eng.max_queue == 1
+    # rung 4: below min_viable -> refuse new work
+    gov.set_budget(gov.refuse_below - 1)
+    eng.step()
+    assert gov.refusing
+    eng.submit(Request(tokens=prompts[2], max_new=4, rid=2))
+    assert next(c for c in eng.completions
+                if c.rid == 2).finished == "pressure"
+    # regrow: budget fully recovers; sustained for cooldown steps
+    gov.set_budget(boot)
+    for _ in range(gov.cooldown_steps + 1):
+        eng.step()
+    eng.drain()
+    assert not gov.refusing and mgr.capacity == 3 and mgr.prefetch_enabled
+    assert eng.pool.n_pages_usable == eng.pool.n_pages
+
+    by_rid = {c.rid: c for c in eng.completions}
+    parity_ok = all(np.array_equal(refs[i], by_rid[i].tokens)
+                    for i in range(2))
+    assert parity_ok, "preempted/survivor output diverged"
+    delta = {k: FALLBACK_COUNTS[k] - base[k] for k in base}
+    assert all(v >= 1 for v in delta.values()), delta
+    lat = dict(gov.rung_latency)
+    for rung in ("trim_experts", "retire_kv", "regrow_kv",
+                 "regrow_experts"):
+        assert rung in lat, lat
+    eng.close()
+
+    summary = dict(
+        bench="reclaim_ladder", arch=arch, seed=seed,
+        plan_changes=gov.plan_changes, fallback_delta=delta,
+        survivor_parity_ok=parity_ok, resumed=by_rid[0].resumed
+        + by_rid[1].resumed, rung_latency_s=lat,
+        refuse_below_bytes=gov.refuse_below, boot_bytes=boot)
+    for rung, dt in sorted(lat.items()):
+        emit(f"pressure.latency_{rung}_ms", f"{dt * 1e3:.2f}",
+             "time-to-reclaim" if rung.startswith(("trim", "retire"))
+             else "time-to-regrow")
+    emit("pressure.ladder_rungs", str(len(lat)),
+         f"preempted+resumed={summary['resumed']} parity_ok={parity_ok}")
+    if rows is not None:
+        rows.append(summary)
+    return summary
+
+
+def pressure_json(path: str = "BENCH_pressure.json", *, seed: int = 0):
+    """Machine-readable memory-pressure artifact."""
+    rows: list = []
+    pressure_sweep(rows, seed=seed)
+    reclaim_ladder(rows, seed=seed)
+    payload = {"schema": 1, "bench": "pressure",
+               "backend": jax.default_backend(),
+               "host_devices": jax.device_count(),
+               "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    emit("pressure.json_rows", str(len(rows)), path)
+    return payload
+
+
+def main():
+    pressure_json()
+
+
+if __name__ == "__main__":
+    main()

@@ -103,15 +103,48 @@ class DeviceBudget:
             return 0
         return int(self.expert_cache_bytes // (n_layers * bytes_per_expert))
 
-    def summary(self) -> str:
+    # -- runtime budget adaptation (serve/governor.py) ------------------
+    def resplit(self, budget_bytes: int, *,
+                kv_bytes: int | None = None) -> "DeviceBudget":
+        """Re-split under a *moved* runtime budget (the 4–8 GB unified-
+        memory regime: the OS can reclaim hundreds of MiB mid-decode).
+        The class stays frozen — a re-split is a new value, so every
+        holder of the old split keeps a consistent snapshot; the
+        ``MemoryGovernor`` swaps its reference at a step fence.  The
+        resident and activation reserves are not elastic; ``kv_bytes``
+        may shrink/regrow with the paged pool."""
+        return dataclasses.replace(
+            self, budget_bytes=int(budget_bytes),
+            kv_bytes=self.kv_bytes if kv_bytes is None else int(kv_bytes))
+
+    def min_viable(self, *, kv_floor_bytes: int = 0,
+                   expert_floor_bytes: int = 0) -> int:
+        """The smallest budget the engine can run under at all: the
+        inelastic reserve (resident weights + activation workspace) plus
+        the floors of the two elastic tiers — one decode slot's KV pages
+        and one cached expert per MoE layer.  Below this the reclaim
+        ladder cannot help; the governor clamps here and *refuses new
+        work* instead of pretending to fit (the overshoot is surfaced,
+        never hidden)."""
+        return int(self.resident_bytes + self.act_bytes
+                   + kv_floor_bytes + expert_floor_bytes)
+
+    def summary(self, expert_cache_used: int | None = None) -> str:
         mib = 2.0 ** 20
-        return (f"device budget {self.budget_bytes / mib:.0f} MiB: "
-                f"resident {self.resident_bytes / mib:.1f} + "
-                f"kv {self.kv_bytes / mib:.1f} + "
-                f"act {self.act_bytes / mib:.1f} MiB reserved -> "
-                f"{self.expert_cache_bytes / mib:.1f} MiB expert cache "
-                f"({'fully resident' if self.fully_resident else 'tiered'}"
-                f"; experts total {self.expert_bytes / mib:.1f} MiB)")
+        s = (f"device budget {self.budget_bytes / mib:.0f} MiB: "
+             f"resident {self.resident_bytes / mib:.1f} + "
+             f"kv {self.kv_bytes / mib:.1f} + "
+             f"act {self.act_bytes / mib:.1f} MiB reserved -> "
+             f"{self.expert_cache_bytes / mib:.1f} MiB expert cache "
+             f"({'fully resident' if self.fully_resident else 'tiered'}"
+             f"; experts total {self.expert_bytes / mib:.1f} MiB)")
+        if expert_cache_used is not None \
+                and expert_cache_used > self.expert_cache_bytes:
+            over = expert_cache_used - self.expert_cache_bytes
+            s += (f" — OVERSHOOT: cache holds "
+                  f"{expert_cache_used / mib:.1f} MiB, "
+                  f"{over / mib:.1f} MiB over the granted budget")
+        return s
 
 
 def device_budget(budget_bytes: int, *, expert_bytes: int,

@@ -34,6 +34,15 @@ the grouped kernel, with routing-aware one-layer-ahead prefetch
 (serve/residency.py, docs/residency.md).  Outputs are bitwise-equal to
 fully-resident serving; the summary adds hit/miss/prefetch/eviction/
 bytes-fetched counters alongside the resilience health snapshot.
+
+Runtime memory pressure (``--pressure-trace step|spike|ramp|oscillate``):
+replays a seeded budget trace (``testing.faults.pressure_trace``) against
+a ``serve.governor.MemoryGovernor`` attached to the engine — the budget
+moves per step and the governor walks the reclaim/regrow ladder (trim
+expert cache → shrink KV pool/preempt → tighten admission → refuse new
+work as ``finished='pressure'``), with ``--min-budget-mib`` as the
+operator refusal floor.  The end-of-run summary prints the applied plan,
+plan-change count, and per-rung reclaim latency (docs/serving.md).
 """
 from __future__ import annotations
 
@@ -126,6 +135,22 @@ def main():
     ap.add_argument("--hbm-budget-mib", type=int, default=4096,
                     help="device memory budget used to auto-size the "
                          "expert cache (paper target: 4-8 GB edge)")
+    ap.add_argument("--pressure-trace", default="none",
+                    choices=["none", "step", "spike", "ramp", "oscillate"],
+                    help="replay a seeded runtime memory-pressure trace "
+                         "against the serving engine: the budget moves "
+                         "per step and serve.governor.MemoryGovernor "
+                         "walks the reclaim/regrow ladder "
+                         "(testing.faults.pressure_trace; seeded via "
+                         "REPRO_FAULT_SEED)")
+    ap.add_argument("--pressure-low-mib", type=int, default=0,
+                    help="the trace's low watermark (0 = auto: 60%% of "
+                         "--hbm-budget-mib)")
+    ap.add_argument("--min-budget-mib", type=int, default=0,
+                    help="operator floor for the governor: below this it "
+                         "refuses new work (finished='pressure') instead "
+                         "of reclaiming further (0 = the computed "
+                         "min_viable floor only)")
     args = ap.parse_args()
 
     mesh = _parse_mesh(args.mesh)
@@ -156,44 +181,78 @@ def main():
         print(f"mesh: {dict(mesh.shape)}")
 
     max_len = args.prompt_len + args.max_new
-    residency = None
-    if args.residency == "tiered":
-        # Tiered expert residency: compressed expert planes back off to
-        # host RAM; an HBM cache sized by the device budget serves the
-        # grouped kernel (serve/residency.py).  Compressed MoE, mesh-less.
+
+    def _tree_bytes(t):
+        return sum(int(l.nbytes) for l in jax.tree_util.tree_leaves(t)
+                   if hasattr(l, "nbytes"))
+
+    def _device_budget(expert_bytes: int) -> "object":
         from repro.core.policy import device_budget
         from repro.serve.kv_cache import PagedKVPool
-        from repro.serve.residency import ResidencyManager
-        assert args.mode == "compressed", \
-            "--residency tiered requires --mode compressed"
-        assert mesh is None, "--residency tiered is single-device (no --mesh)"
-
-        def _tree_bytes(t):
-            return sum(int(l.nbytes) for l in jax.tree_util.tree_leaves(t)
-                       if hasattr(l, "nbytes"))
-
-        expert_bytes = _tree_bytes(sp["blocks"]["moe"]["experts"])
         resident_bytes = _tree_bytes(sp) - expert_bytes + \
             (int(lut.nbytes) if lut is not None else 0)
         probe_pool = PagedKVPool(cfg, args.slots, max_len,
                                  page_size=args.page_size)
         kv_bytes = _tree_bytes(probe_pool.pages)
-        del probe_pool
-        budget = device_budget(args.hbm_budget_mib * 2**20,
-                               expert_bytes=expert_bytes,
-                               resident_bytes=resident_bytes,
-                               kv_bytes=kv_bytes,
-                               act_bytes=64 * 2**20)
-        print(budget.summary())
+        return device_budget(args.hbm_budget_mib * 2**20,
+                             expert_bytes=expert_bytes,
+                             resident_bytes=resident_bytes,
+                             kv_bytes=kv_bytes,
+                             act_bytes=64 * 2**20)
+
+    budget = None
+    residency = None
+    if args.residency == "tiered":
+        # Tiered expert residency: compressed expert planes back off to
+        # host RAM; an HBM cache sized by the device budget serves the
+        # grouped kernel (serve/residency.py).  Compressed MoE, mesh-less.
+        from repro.serve.residency import ResidencyManager
+        assert args.mode == "compressed", \
+            "--residency tiered requires --mode compressed"
+        assert mesh is None, "--residency tiered is single-device (no --mesh)"
+
+        budget = _device_budget(_tree_bytes(sp["blocks"]["moe"]["experts"]))
         cache_bytes = (args.expert_cache_mib * 2**20
                        if args.expert_cache_mib > 0
                        else budget.expert_cache_bytes)
         st = dataclasses.replace(st, params=sp, lut=lut)
         residency = ResidencyManager(st, cfg, cache_bytes=cache_bytes)
+        # summary(expert_cache_used=...) surfaces the overshoot when the
+        # granted budget was too small and the cache clamped to its
+        # one-expert-per-layer floor — never silently hidden
+        used = (residency.capacity * residency.n_layers
+                * residency.bytes_per_expert)
+        print(budget.summary(expert_cache_used=used))
         print(f"expert cache: {residency.capacity}/{residency.n_experts} "
               f"experts/layer x {residency.n_layers} layers "
-              f"({residency.capacity * residency.n_layers * residency.bytes_per_expert / 2**20:.2f} MiB of "
+              f"({used / 2**20:.2f} MiB of "
               f"{cache_bytes / 2**20:.2f} MiB granted)")
+
+    governor = None
+    if args.pressure_trace != "none":
+        from repro.serve.governor import MemoryGovernor
+        from repro.testing.faults import pressure_trace
+        if budget is None:
+            budget = _device_budget(0)
+        low = (args.pressure_low_mib * 2**20 if args.pressure_low_mib > 0
+               else int(0.6 * args.hbm_budget_mib * 2**20))
+        trace = pressure_trace(args.pressure_trace,
+                               boot_bytes=budget.budget_bytes,
+                               low_bytes=low, n_steps=64)
+        state = {"i": 0}
+
+        def poll():
+            i = min(state["i"], len(trace) - 1)
+            state["i"] += 1
+            return trace[i]
+
+        governor = MemoryGovernor(
+            budget, poll=poll,
+            min_budget_bytes=(args.min_budget_mib * 2**20
+                              if args.min_budget_mib > 0 else None))
+        print(f"pressure trace: {args.pressure_trace} "
+              f"({budget.budget_bytes / 2**20:.0f} -> {low / 2**20:.0f} MiB "
+              f"low watermark over {len(trace)} steps)")
     if st is not None:
         # integrity gate (manifest re-hash + device invariants) runs at
         # construction when --verify is on; corrupt leaves raise
@@ -209,14 +268,15 @@ def main():
                                 page_size=args.page_size,
                                 max_queue=args.max_queue,
                                 shed_policy=args.shed_policy,
-                                request_ttl=args.request_ttl)
+                                request_ttl=args.request_ttl,
+                                governor=governor)
     else:
         rengine = None
         eng = Engine(ServeContext(cfg=cfg, mesh=mesh, lut=lut), sp,
                      n_slots=args.slots, max_len=max_len,
                      page_size=args.page_size, max_queue=args.max_queue,
                      shed_policy=args.shed_policy,
-                     request_ttl=args.request_ttl)
+                     request_ttl=args.request_ttl, governor=governor)
 
     toks = np.asarray(data.batch_at(0)["tokens"])
     arrivals = [i * args.stagger for i in range(args.batch)]
@@ -259,8 +319,15 @@ def main():
               f"fetched {r['bytes_fetched']/2**20:.2f} MiB "
               f"hit_rate {r['hit_rate']} prefetch_hit_rate "
               f"{r['prefetch_hit_rate']} stall {r['stall_s']:.3f}s")
+    if governor is not None:
+        s = governor.snapshot()
+        print(f"pressure: plan_changes {s['plan_changes']} "
+              f"refusing {s['refusing']} plan {s['plan']} "
+              f"rung_latency_s {s['rung_latency_s']}")
     by_rid = {c.rid: c for c in eng.completions}
     print("sample:", by_rid[0].tokens[args.prompt_len:].tolist())
+    eng.close()       # stop the residency prefetch worker (no leaked
+    # threads — asserted in tests; see Engine.close)
 
 
 if __name__ == "__main__":

@@ -38,6 +38,18 @@ guarantee of free pages — ``alloc`` raises ``PoolExhausted`` (and
 ``can_alloc`` reports False) when the free list cannot back another
 slot.  The scheduler turns that pressure into preemption/shedding
 instead of letting admits fail (see serve/scheduler.py).
+
+The pool is also *elastic at runtime* (the memory-pressure regime,
+serve/governor.py): ``retire_pages`` removes free pages from
+circulation — highest ids first, so a contiguous retired tail can be
+physically sliced off the device arrays and its HBM actually released —
+and ``restore_pages`` brings them back (re-growing the device arrays
+when the retired set is exhausted).  Both change the pool pytree's
+shapes, so the jitted ``generate_step``/``insert_fragment`` re-trace on
+the next call; the governor fences these behind step boundaries and
+amortizes them with hysteresis.  Live pages are never moved: an
+occupied slot's page ids stay valid across any retire/restore sequence,
+which is what keeps pressured outputs bitwise-equal to unpressured ones.
 """
 from __future__ import annotations
 
@@ -178,10 +190,92 @@ class PagedKVPool:
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self.free_pages: List[int] = list(range(self.n_pages))
         self._owned = [False] * n_slots
+        # Runtime elasticity (serve/governor.py): retired pages are out of
+        # circulation but may still be physically present until the tail
+        # they sit in frees up and can be sliced off.
+        self.retired: set = set()
+        self._dtype = dtype
+
+    @property
+    def n_pages_usable(self) -> int:
+        """Pages in circulation: physically present minus retired."""
+        return self.n_pages - len(self.retired)
+
+    def page_nbytes(self) -> int:
+        """Device bytes of one page across every cache leaf."""
+        return self.device_bytes() // max(self.n_pages, 1)
+
+    def device_bytes(self) -> int:
+        """Physical device bytes of the page pool right now — shrinks when
+        a retired tail is released, regrows with ``restore_pages``."""
+        return sum(int(l.nbytes) for l in jax.tree_util.tree_leaves(
+            self.pages) if hasattr(l, "nbytes"))
 
     def can_alloc(self) -> bool:
         """Whether the free list can back another slot right now."""
         return len(self.free_pages) >= self.pages_per_slot
+
+    # -- runtime shrink / regrow (memory-pressure governor) ------------
+    def retire_pages(self, n: int) -> int:
+        """Take up to ``n`` *free* pages out of circulation; returns how
+        many were actually retired.  Highest ids go first so the retired
+        set accumulates at the pool's tail, and any contiguous all-retired
+        tail is physically sliced off the device arrays (real HBM given
+        back).  Never touches an owned page — live requests keep their KV
+        bitwise-intact — so under pressure the caller preempts requests
+        (freeing their pages) and retires again."""
+        take = sorted(self.free_pages, reverse=True)[:max(0, int(n))]
+        for p in take:
+            self.free_pages.remove(p)
+            self.retired.add(p)
+        self._release_tail()
+        return len(take)
+
+    def restore_pages(self, n: int) -> int:
+        """Return up to ``n`` pages to circulation (the regrow rung).
+        Retired-but-still-present pages come back first; past those, the
+        device arrays grow fresh zero pages (new ids at the tail).
+        Returns the number restored."""
+        n = max(0, int(n))
+        back = sorted(self.retired)[:n]
+        for p in back:
+            self.retired.discard(p)
+            self.free_pages.append(p)
+        grow = n - len(back)
+        if grow > 0:
+            self._grow_pages(grow)
+        return n
+
+    def _release_tail(self) -> None:
+        """Physically drop the contiguous retired tail, if any.  Changes
+        leaf shapes → next jitted step re-traces (callers fence this)."""
+        new_n = self.n_pages
+        while (new_n - 1) in self.retired:
+            new_n -= 1
+        if new_n == self.n_pages:
+            return
+        for p in range(new_n, self.n_pages):
+            self.retired.discard(p)
+        leaves, treedef = jax.tree_util.tree_flatten(self.pages)
+        axes = _axes_leaves(self.cfg)
+        out = []
+        for leaf, (ba, _) in zip(leaves, axes):
+            out.append(leaf[(slice(None),) * ba + (slice(0, new_n),)])
+        self.pages = treedef.unflatten(out)
+        self.n_pages = new_n
+
+    def _grow_pages(self, extra: int) -> None:
+        leaves, treedef = jax.tree_util.tree_flatten(self.pages)
+        axes = _axes_leaves(self.cfg)
+        out = []
+        for leaf, (ba, _) in zip(leaves, axes):
+            shape = list(leaf.shape)
+            shape[ba] = extra
+            out.append(jnp.concatenate(
+                [leaf, jnp.zeros(shape, leaf.dtype)], axis=ba))
+        self.pages = treedef.unflatten(out)
+        self.free_pages.extend(range(self.n_pages, self.n_pages + extra))
+        self.n_pages += extra
 
     def alloc(self, slot: int) -> np.ndarray:
         """Claim ``pages_per_slot`` pages for ``slot`` (LIFO reuse)."""
@@ -203,6 +297,10 @@ class PagedKVPool:
         if self._owned[slot]:
             self.free_pages.extend(int(p) for p in self.page_table[slot])
             self._owned[slot] = False
+            # point the vacant row at page 0: after a retired tail is
+            # physically released, a stale id could land out of range in
+            # the paged_view gather — always-in-bounds beats fill garbage
+            self.page_table[slot] = 0
 
     def insert(self, fragment, slot: int) -> None:
         """Write a prefill fragment into ``slot``'s pages (jitted scatter)."""

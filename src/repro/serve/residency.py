@@ -72,6 +72,7 @@ import functools
 import queue
 import threading
 import time
+import warnings
 import zlib
 from functools import partial
 from typing import Any, Dict, List, Optional, Sequence, Set
@@ -202,12 +203,33 @@ class ResidencyManager:
             for k in _EXPERT_KEYS for pl in _PLANES
             for l in range(self.n_layers) for e in range(self.n_experts)}
 
+        granted_bytes = None
         if capacity is None and cache_bytes is not None:
+            granted_bytes = int(cache_bytes)
             capacity = int(cache_bytes //
                            (self.n_layers * self.bytes_per_expert))
+        elif capacity is not None:
+            granted_bytes = int(capacity) * self.n_layers \
+                * self.bytes_per_expert
         self.capacity = (self.n_experts if capacity is None
                          else max(1, min(int(capacity), self.n_experts)))
+        # The cache floor is one expert per layer — a smaller grant is
+        # clamped UP, which overshoots the caller's byte budget.  Never
+        # hide that: warn here, record it for snapshot()/health(), and let
+        # DeviceBudget.summary(expert_cache_used=...) print it.
+        floor_bytes = self.n_layers * self.bytes_per_expert
+        self.overshoot_bytes = 0
+        if granted_bytes is not None and granted_bytes < floor_bytes:
+            self.overshoot_bytes = floor_bytes - max(granted_bytes, 0)
+            warnings.warn(
+                f"expert-cache budget {granted_bytes / 2**20:.2f} MiB grants "
+                f"0 experts/layer; clamping to capacity 1 overshoots the "
+                f"budget by {self.overshoot_bytes / 2**20:.2f} MiB "
+                f"({self.n_layers} layers x "
+                f"{self.bytes_per_expert / 2**20:.2f} MiB/expert)",
+                RuntimeWarning, stacklevel=2)
         self.c_alloc = self.capacity
+        self.boot_capacity = self.capacity
 
         # HBM tier: zero-initialised C-slot cache stacks, same container
         # metadata as the source so the grouped-kernel gate stays open.
@@ -246,6 +268,7 @@ class ResidencyManager:
         self._last_needed: Dict[int, Set[int]] = {}
 
         self.prefetch_enabled = bool(prefetch)
+        self._prefetch_boot = bool(prefetch)
         self._worker: Optional[threading.Thread] = None
         self._queue: "queue.Queue" = queue.Queue()
         self._lock = threading.Lock()
@@ -275,6 +298,8 @@ class ResidencyManager:
             capacity=self.capacity, slots_allocated=self.c_alloc,
             layers=self.n_layers, experts=self.n_experts,
             bytes_per_expert=self.bytes_per_expert,
+            overshoot_bytes=self.overshoot_bytes,
+            prefetch_enabled=self.prefetch_enabled,
             stall_s=round(self.stall_s, 6),
             stall_per_miss_ms=round(1e3 * self.stall_s / max(s["miss"], 1),
                                     4),
@@ -460,6 +485,45 @@ class ResidencyManager:
         self.c_alloc = self.capacity
         self._maps_dirty = True
 
+    # -- runtime capacity (memory-pressure governor) --------------------
+    def set_capacity(self, capacity: int) -> None:
+        """Re-size the retained per-layer cache at runtime.
+
+        Shrinking compacts the C-slot stacks to the new capacity (MRU
+        experts survive, the LRU tail is evicted); growing pads vacant
+        slots eagerly so regrown room is used by installs instead of
+        evictions.  Either direction changes the stack shapes, so the
+        next jitted step **re-traces** — callers (the governor) must
+        fence this between scheduler steps and amortize it with
+        hysteresis, never per-step.  Parity is unaffected: the
+        fetch/replay protocol re-fetches whatever a later step routes to,
+        so mid-stream shrink-to-1-then-regrow stays bitwise-equal
+        (tests/test_residency.py).  Clamped to [1, n_experts]; a clamp-up
+        from a sub-floor request records ``overshoot_bytes``."""
+        want = int(capacity)
+        capacity = max(1, min(want, self.n_experts))
+        floor_bytes = self.n_layers * self.bytes_per_expert
+        self.overshoot_bytes = floor_bytes if want < 1 else 0
+        if capacity == self.capacity:
+            return
+        self.join_prefetches()       # no installs racing the re-shape
+        self.capacity = capacity
+        if self.c_alloc > capacity:
+            self._trim()
+        elif self.c_alloc < capacity:
+            self._grow(capacity - self.c_alloc)
+        self._maps_dirty = True
+
+    def pause_prefetch(self) -> None:
+        """Stop issuing predictions (reclaim rung 1): in-flight fetches
+        drain at the next ``join_prefetches`` and still install — pausing
+        stops new host→HBM traffic, it never corrupts the protocol."""
+        self.prefetch_enabled = False
+
+    def resume_prefetch(self) -> None:
+        """Re-enable prediction issue (regrow), back to the boot setting."""
+        self.prefetch_enabled = self._prefetch_boot
+
     # -- prefetch -------------------------------------------------------
     def _start_worker(self) -> None:
         if self._worker is None or not self._worker.is_alive():
@@ -491,10 +555,15 @@ class ResidencyManager:
                 self._queue.task_done()
 
     def close(self) -> None:
-        """Stop the prefetch worker (daemon thread — optional)."""
+        """Stop and join the prefetch worker.  Idempotent; called by
+        ``scheduler.Engine.close()`` / ``ResilientEngine.close()`` so
+        serving teardown leaves no live ``residency-prefetch`` thread
+        (asserted in tests)."""
         if self._worker is not None and self._worker.is_alive():
             self._queue.put(None)
             self._queue.join()
+            self._worker.join(timeout=5.0)
+        self._worker = None
 
     def join_prefetches(self) -> None:
         """Wait out in-flight prefetches and install what landed — called

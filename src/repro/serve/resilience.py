@@ -68,7 +68,13 @@ from repro.serve import engine as _engine
 # degradation story: 'quarantine' per poisoned request refused out of a
 # batch, 'preempt' per in-flight request evicted under page pressure,
 # 'shed' per request shed by the bounded queue, 'expired' per TTL /
-# deadline expiry.  Reset between tests by the autouse conftest fixture.
+# deadline expiry.  The memory-pressure governor (serve/governor.py)
+# ticks 'pressure_*' keys: 'pressure_trim' per residency-capacity trim,
+# 'pressure_kv_retire' per KV page-retirement batch, 'pressure_preempt'
+# per in-flight request evicted to shrink the pool, 'pressure_tighten'
+# per admission tightening, 'pressure_refused' per submission refused at
+# rung 4, 'pressure_regrow' per regrow-ladder application.  Reset
+# between tests by the autouse conftest fixture.
 FALLBACK_COUNTS = collections.Counter()
 
 # Ladder rung -> the ops session impl that forces it.  'fused' serves with
@@ -285,14 +291,32 @@ class ResilientEngine:
     def scheduler(self, **engine_kw):
         """A continuous-batching ``scheduler.Engine`` whose every jitted
         prefill/decode step walks this engine's resilience ladder.  Keyword
-        args (``n_slots``, ``max_len``, ``page_size``, ...) pass through."""
+        args (``n_slots``, ``max_len``, ``page_size``, ``governor``, ...)
+        pass through; the built engine is remembered so ``health()`` /
+        ``close()`` cover it."""
         from repro.serve.context import ServeContext
         from repro.serve import scheduler as _sched
         ctx = ServeContext(cfg=self.cfg, mesh=self.mesh, lut=self.state.lut,
                            verify=self.policy.verify,
                            residency=self.residency)
-        return _sched.Engine(ctx, self.state.params, guard=self._guard,
-                             **engine_kw)
+        self._scheduler = _sched.Engine(ctx, self.state.params,
+                                        guard=self._guard, **engine_kw)
+        return self._scheduler
+
+    def close(self) -> None:
+        """Tear down serving workers (residency prefetch thread) —
+        idempotent; also usable as a context manager."""
+        sched = getattr(self, "_scheduler", None)
+        if sched is not None:
+            sched.close()
+        elif self.residency is not None:
+            self.residency.close()
+
+    def __enter__(self) -> "ResilientEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def health(self) -> dict:
         """Snapshot for operators/CI: verify + probe counters + last rung.
@@ -311,4 +335,7 @@ class ResilientEngine:
         }
         if self.residency is not None:
             out["residency"] = self.residency.snapshot()
+        sched = getattr(self, "_scheduler", None)
+        if sched is not None and sched.governor is not None:
+            out["pressure"] = sched.governor.snapshot()
         return out

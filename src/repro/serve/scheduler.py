@@ -139,7 +139,8 @@ class Completion:
     prompt: np.ndarray
     tokens: np.ndarray
     n_generated: int
-    finished: str        # 'eos' | 'max_new' | 'shed' | 'deadline' | 'refused'
+    finished: str        # 'eos' | 'max_new' | 'shed' | 'deadline' |
+                         # 'refused' | 'pressure'
     submitted_step: int
     finished_step: int
     resumed: int = 0     # preempt/quarantine-survivor re-prefills it took
@@ -227,7 +228,8 @@ class Engine:
                  max_queue: Optional[int] = None,
                  shed_policy: str = "reject-new",
                  request_ttl: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 governor=None):
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f"shed_policy must be one of {SHED_POLICIES}, "
                              f"got {shed_policy!r}")
@@ -245,7 +247,15 @@ class Engine:
         self._next_rid = 0
         self.steps = 0
         self.completions: List[Completion] = []
+        # Optional serve.governor.MemoryGovernor: runs at the top of every
+        # step() (the fence where no jitted call is in flight) and may
+        # trim/regrow the residency cache, retire/restore KV pages,
+        # preempt in-flight requests, tighten max_queue, or flip the
+        # engine into refuse-new-work mode (finished='pressure').
+        self.governor = governor
         self.reset_stats()
+        if governor is not None:
+            governor.attach(self)
 
     def reset_stats(self) -> None:
         """Zero the lifecycle counters (benchmarks call this after a
@@ -255,7 +265,8 @@ class Engine:
         self.stats = {"admitted": 0, "joined_mid_decode": 0,
                       "occupancy": [], "shed": 0, "expired": 0,
                       "preempted": 0, "quarantined": 0, "resumed": 0,
-                      "queue_peak": 0}
+                      "queue_peak": 0, "pressure_refused": 0,
+                      "pressure_preempted": 0}
         mgr = getattr(self.ctx, "residency", None)
         if mgr is not None:
             from repro.serve.residency import RESIDENCY_COUNTS
@@ -297,6 +308,16 @@ class Engine:
                                                    rid=rid),
                            submitted_step=self.steps,
                            submit_time=time.monotonic())
+        if self.governor is not None and self.governor.refusing:
+            # rung 4 of the reclaim ladder: the budget fell below
+            # min_viable — new work is refused with its own accounted-for
+            # reason, never queued behind an engine that cannot grow
+            FALLBACK_COUNTS["pressure_refused"] += 1
+            self.stats["pressure_refused"] += 1
+            self.completions.append(self._completion(
+                pending.req.rid, pending.req.tokens, [], "pressure",
+                pending.submitted_step))
+            return rid
         if self.max_queue is not None and len(self._queue) >= self.max_queue:
             if self.shed_policy == "reject-new":
                 self._shed(pending)
@@ -309,7 +330,12 @@ class Engine:
 
     def step(self) -> List[Completion]:
         """One engine tick: expire → admit → decode one token → retire.
-        Returns the completions this tick produced."""
+        Returns the completions this tick produced.  When a governor is
+        attached it runs first — the step boundary is the only fence
+        where no jitted call is in flight, so capacity trims / page
+        retirement (which reshape traced arrays) are safe here."""
+        if self.governor is not None:
+            self.governor.on_step(self)
         done = self._expire()
         done.extend(self._admit())
         occ = [i for i, s in enumerate(self._slots) if s is not None]
@@ -360,7 +386,24 @@ class Engine:
         mgr = getattr(self.ctx, "residency", None)
         if mgr is not None:
             out["residency"] = mgr.snapshot()
+        if self.governor is not None:
+            out["pressure"] = self.governor.snapshot()
         return out
+
+    def close(self) -> None:
+        """Tear down serving-side workers (idempotent).  Today that is
+        the residency prefetch thread — nothing else owns it, so an
+        engine that was handed a tiered context must stop it or every
+        served model leaks a live ``residency-prefetch`` thread."""
+        mgr = getattr(self.ctx, "residency", None)
+        if mgr is not None:
+            mgr.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- overload internals --------------------------------------------
     def _shed(self, p: _Pending) -> None:
@@ -430,6 +473,31 @@ class Engine:
         # requeue right behind the head that displaced it, carrying its
         # generated tokens; it resumes via re-prefill when pages free up
         self._queue.insert(1, _Pending(
+            req=victim.req, submitted_step=victim.submitted_step,
+            submit_time=victim.submit_time, out=list(victim.out),
+            resumed=victim.resumed + 1))
+        self.pool.free(i)
+        self._slots[i] = None
+        return True
+
+    def preempt_lowest(self) -> bool:
+        """Evict the lowest-priority (tie: youngest) in-flight request to
+        give its pages back under *memory pressure* (governor rung 2).
+        Unlike ``_preempt_for`` there is no displacing head, so no
+        priority precondition — the pool itself must shrink and someone
+        has to yield.  The victim requeues at the front with its tokens
+        and resumes bitwise-equal via the re-prefill path once pages
+        exist again."""
+        occ = [(s.req.priority, -s.submitted_step, i)
+               for i, s in enumerate(self._slots) if s is not None]
+        if not occ:
+            return False
+        _, _, i = min(occ)
+        victim = self._slots[i]
+        FALLBACK_COUNTS["pressure_preempt"] += 1
+        self.stats["preempted"] += 1
+        self.stats["pressure_preempted"] += 1
+        self._queue.appendleft(_Pending(
             req=victim.req, submitted_step=victim.submitted_step,
             submit_time=victim.submit_time, out=list(victim.out),
             resumed=victim.resumed + 1))

@@ -1,4 +1,6 @@
 """Test-support utilities importable by tests, benchmarks, and CI jobs."""
-from .faults import FaultInjector, FaultProbe
+from .faults import (FaultInjector, FaultProbe, PRESSURE_KINDS,
+                     pressure_trace)
 
-__all__ = ["FaultInjector", "FaultProbe"]
+__all__ = ["FaultInjector", "FaultProbe", "PRESSURE_KINDS",
+           "pressure_trace"]

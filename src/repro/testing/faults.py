@@ -32,6 +32,12 @@ actually sees:
     isolate it.  ``alloc_failure(times)`` injects page-pool exhaustion
     at the KV-pool alloc seam, driving the preempt/requeue path without
     having to construct an overcommitted pool.
+  * **Memory pressure** — ``pressure_trace(kind, ...)`` builds a seeded
+    per-step HBM-budget trace (step / spike / ramp / oscillate — the
+    jetsam-style reclaim shapes a 4–8 GB unified-memory device sees) and
+    ``memory_pressure(trace)`` replays it through the
+    ``serve.governor._os_pressure`` seam, driving the governor's
+    reclaim/regrow ladder exactly as a real OS watermark would.
   * **Residency faults** — ``fetch_fault(times, delay_s)`` breaks (or,
     with a delay, slows) ``serve.residency._transfer``, the host→HBM
     expert-fetch seam of the tiered-residency cache; a persistent fault
@@ -69,6 +75,55 @@ class FaultProbe:
 
     def __init__(self):
         self.executions = 0
+
+
+PRESSURE_KINDS = ("step", "spike", "ramp", "oscillate")
+
+
+def pressure_trace(kind: str, *, boot_bytes: int, low_bytes: int,
+                   n_steps: int, period: int = 8,
+                   seed: Optional[int] = None) -> list:
+    """A seeded per-step HBM-budget trace (bytes), one value per engine
+    step — the pressure shapes a shared-memory edge device actually sees:
+
+      * 'step'       — budget drops to ``low_bytes`` at a seeded step and
+                       stays there (the OS claimed pages for good);
+      * 'spike'      — a short seeded window at ``low_bytes``, then full
+                       recovery (a co-tenant app launch);
+      * 'ramp'       — linear descent to ``low_bytes`` over the first
+                       half, linear recovery over the second (background
+                       compaction / thermal backoff);
+      * 'oscillate'  — square wave between the two levels with period
+                       ``period`` and a seeded phase (the thrash trace:
+                       hysteresis must keep the plan-change count bounded
+                       by band crossings, not steps).
+
+    Seeded from ``REPRO_FAULT_SEED`` by default so CI varies the timing
+    without losing reproducibility.
+    """
+    if kind not in PRESSURE_KINDS:
+        raise ValueError(f"kind must be one of {PRESSURE_KINDS}, "
+                         f"got {kind!r}")
+    rng = np.random.default_rng(_default_seed() if seed is None else seed)
+    boot, low, n = int(boot_bytes), int(low_bytes), int(n_steps)
+    t = np.arange(n)
+    if kind == "step":
+        at = int(rng.integers(1, max(2, n // 4)))
+        vals = np.where(t < at, boot, low)
+    elif kind == "spike":
+        width = max(1, period // 2)
+        at = int(rng.integers(1, max(2, n - width)))
+        vals = np.where((t >= at) & (t < at + width), low, boot)
+    elif kind == "ramp":
+        half = max(1, n // 2)
+        vals = np.concatenate([
+            np.linspace(boot, low, half),
+            np.linspace(low, boot, n - half)]).astype(np.int64)
+    else:                                              # oscillate
+        phase = int(rng.integers(max(1, period)))
+        vals = np.where(((t + phase) // max(1, period)) % 2 == 0,
+                        boot, low)
+    return [int(v) for v in vals]
 
 
 class FaultInjector:
@@ -227,6 +282,37 @@ class FaultInjector:
             except Exception:
                 pass
             _dispatch.runtime_tokens.clear()
+
+    # -- memory pressure -----------------------------------------------
+    @contextlib.contextmanager
+    def memory_pressure(self, trace, *, hold_last: bool = True):
+        """Replay a budget trace through ``serve.governor._os_pressure``.
+
+        Each governor poll (one per engine step) consumes the next value
+        of ``trace`` (bytes); past the end the last value holds (the
+        pressure persists) unless ``hold_last=False``, after which the
+        seam reports no signal.  Yields a :class:`FaultProbe` whose
+        ``executions`` counts the polls served — tests use it to assert
+        the trace actually drove the steps they measured.
+        """
+        from repro.serve import governor as _gov
+
+        orig = _gov._os_pressure
+        probe = FaultProbe()
+        seq = [int(v) for v in trace]
+
+        def patched():
+            i = probe.executions
+            probe.executions += 1
+            if i < len(seq):
+                return seq[i]
+            return seq[-1] if (hold_last and seq) else None
+
+        _gov._os_pressure = patched
+        try:
+            yield probe
+        finally:
+            _gov._os_pressure = orig
 
     # -- residency faults ----------------------------------------------
     @contextlib.contextmanager

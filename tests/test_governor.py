@@ -1,0 +1,371 @@
+"""Memory-pressure governor — reclaim/regrow ladder under budget traces.
+
+The acceptance contract (ROADMAP §memory pressure): under any pressure
+trace — step, spike, ramp, oscillate — the engine
+
+  * keeps its *accounted* footprint (usable KV pages + expert-cache
+    capacity) within the instantaneous budget, reclaiming at the next
+    step fence;
+  * ends every affected request as an accounted-for ``Completion``
+    (``finished`` ∈ {eos, max_new, shed, deadline, refused, pressure});
+  * serves survivors **bitwise-equal** to an unpressured run (pressure
+    moves where KV lives and when requests run, never what they
+    compute);
+  * never thrashes: oscillation inside a hysteresis band produces zero
+    plan changes, so the retrace count is bounded by sustained band
+    crossings — not by trace length;
+  * leaks nothing: teardown (``Engine.close``) stops the residency
+    prefetch worker.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import CompressionPolicy
+from repro.core.policy import device_budget
+from repro.models import lm as LM
+from repro.serve import engine as engine_mod
+from repro.serve.context import ServeContext
+from repro.serve.engine import build_serve_params, generate
+from repro.serve.governor import MemoryGovernor
+from repro.serve.kv_cache import PagedKVPool
+from repro.serve.resilience import FALLBACK_COUNTS
+from repro.serve.scheduler import Engine, Request
+from repro.testing import (FaultInjector, PRESSURE_KINDS, pressure_trace)
+
+ACCOUNTED = {"eos", "max_new", "shed", "deadline", "refused", "pressure"}
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_config("llama3.2-1b").smoke
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    st = build_serve_params(
+        params, CompressionPolicy(mode="compressed", min_weight_size=1024))
+    return cfg, st, ServeContext.from_state(cfg, st)
+
+
+def _prompts(cfg, n, seed=100):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size,
+                        int(rng.randint(4, 10))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _ref(st, cfg, ctx, prompt, max_new, max_len):
+    return np.asarray(generate(st.params, cfg, prompt[None, :], ctx=ctx,
+                               max_new=max_new, max_len=max_len))[0]
+
+
+def _kv_budget(cfg, n_slots=2, max_len=16, page_size=8):
+    """(DeviceBudget sized to exactly the boot KV pool, page_nbytes) —
+    resident/act/expert reserves zero, so the governor's plan math is
+    transparent: budget k*page_nbytes ⇒ k usable pages."""
+    pool = PagedKVPool(cfg, n_slots, max_len, page_size=page_size)
+    pn = pool.page_nbytes()
+    boot = pool.n_pages * pn
+    return device_budget(boot, expert_bytes=0, kv_bytes=boot), pn
+
+
+# -- the pressure-trace generator ---------------------------------------
+
+def test_pressure_trace_shapes_and_seeding():
+    boot, low = 1000, 400
+    for kind in PRESSURE_KINDS:
+        tr = pressure_trace(kind, boot_bytes=boot, low_bytes=low,
+                            n_steps=32, seed=3)
+        assert len(tr) == 32
+        assert min(tr) >= low and max(tr) <= boot
+        assert tr == pressure_trace(kind, boot_bytes=boot, low_bytes=low,
+                                    n_steps=32, seed=3)   # reproducible
+    step = pressure_trace("step", boot_bytes=boot, low_bytes=low,
+                          n_steps=32, seed=3)
+    assert step[0] == boot and step[-1] == low
+    spike = pressure_trace("spike", boot_bytes=boot, low_bytes=low,
+                           n_steps=32, seed=3)
+    assert spike[0] == boot and spike[-1] == boot and low in spike
+    ramp = pressure_trace("ramp", boot_bytes=boot, low_bytes=low,
+                          n_steps=32, seed=3)
+    assert ramp[0] == boot and min(ramp) == low and ramp[-1] == boot
+    osc = pressure_trace("oscillate", boot_bytes=boot, low_bytes=low,
+                         n_steps=32, period=4, seed=3)
+    assert set(osc) == {boot, low}
+    with pytest.raises(ValueError, match="kind"):
+        pressure_trace("cliff", boot_bytes=boot, low_bytes=low, n_steps=8)
+
+
+# -- reclaim ladder ------------------------------------------------------
+
+def test_reclaim_preempts_and_survivors_stay_bitwise(served):
+    """Budget halves mid-decode with both slots live and zero free pages:
+    rung 2 must preempt the victim (no strictly-lower-priority check —
+    the pool itself shrinks), retire its pages, and the victim resumes
+    bitwise-equal once the other tenant finishes."""
+    cfg, st, ctx = served
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, governor=gov)
+    p0, p1 = [p[:6] for p in _prompts(cfg, 2, seed=51)]
+    eng.submit(Request(tokens=p0, max_new=8, rid=0))
+    eng.submit(Request(tokens=p1, max_new=8, rid=1))
+    eng.step()                      # both in flight; all pages owned
+    gov.set_budget(2 * pn)          # room for exactly one slot
+    eng.step()                      # fence: reclaim walks the ladder
+    assert eng.pool.n_pages_usable == 2
+    assert eng.pool.device_bytes() <= 2 * pn     # tail physically gone
+    assert FALLBACK_COUNTS["pressure_kv_retire"] >= 1
+    assert FALLBACK_COUNTS["pressure_preempt"] == 1
+    assert eng.health()["pressure"]["plan"]["pages"] == 2
+    eng.drain()
+    by_rid = {c.rid: c for c in eng.completions}
+    assert by_rid[0].finished == "max_new" and by_rid[1].finished == "max_new"
+    assert {by_rid[0].resumed, by_rid[1].resumed} == {0, 1}   # one victim
+    for rid, p in ((0, p0), (1, p1)):
+        np.testing.assert_array_equal(
+            by_rid[rid].tokens, _ref(st, cfg, ctx, p, 8, eng.pool.max_len),
+            err_msg=f"request {rid} diverged under pressure")
+
+
+def test_reclaim_tightens_admission(served):
+    """With the pool shrunk to one slot's worth the governor caps
+    max_queue at the backing slot count; the overflow sheds through the
+    existing bounded-queue path."""
+    cfg, st, ctx = served
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, governor=gov)
+    gov.set_budget(2 * pn)
+    eng.step()
+    assert eng.max_queue == 1
+    assert FALLBACK_COUNTS["pressure_tighten"] == 1
+    p = _prompts(cfg, 1, seed=53)[0][:6]
+    eng.submit(Request(tokens=p, max_new=2, rid=0))
+    eng.step()                                        # rid 0 admitted
+    eng.submit(Request(tokens=p, max_new=2, rid=1))   # queued (1/1)
+    eng.submit(Request(tokens=p, max_new=2, rid=2))   # overflow: sheds
+    eng.drain()
+    by_rid = {c.rid: c for c in eng.completions}
+    assert by_rid[2].finished == "shed"
+    assert all(by_rid[i].finished == "max_new" for i in (0, 1))
+
+
+def test_refuse_below_floor_then_recover(served):
+    """Below min_viable the governor clamps at the floors and refuses new
+    submissions as finished='pressure'; queued/in-flight work still
+    drains.  When the budget recovers (sustained past the hysteresis
+    cooldown) the regrow ladder restores the boot plan and admission."""
+    cfg, st, ctx = served
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget, cooldown_steps=3)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, governor=gov)
+    p = _prompts(cfg, 1, seed=55)[0][:6]
+    eng.submit(Request(tokens=p, max_new=3, rid=0))
+    gov.set_budget(pn)               # below the one-slot KV floor
+    eng.step()
+    assert gov.refusing
+    assert eng.pool.n_pages_usable == eng.pool.pages_per_slot  # floor holds
+    rid = eng.submit(Request(tokens=p, max_new=3, rid=9))
+    refused = [c for c in eng.completions if c.rid == rid]
+    assert len(refused) == 1 and refused[0].finished == "pressure"
+    assert refused[0].n_generated == 0
+    assert FALLBACK_COUNTS["pressure_refused"] == 1
+    eng.drain()                      # the admitted request still finishes
+    assert {c.rid: c.finished for c in eng.completions}[0] == "max_new"
+    # recovery: sustained boot budget regrows pages and lifts the refusal
+    gov.set_budget(budget.budget_bytes)
+    for _ in range(gov.cooldown_steps + 1):
+        eng.step()
+    assert not gov.refusing
+    assert eng.pool.n_pages_usable == eng.pool.n_pages
+    assert eng.max_queue is None
+    assert FALLBACK_COUNTS["pressure_regrow"] >= 1
+    eng.submit(Request(tokens=p, max_new=3, rid=10))
+    [c] = eng.drain()
+    assert c.finished == "max_new"
+    np.testing.assert_array_equal(
+        c.tokens, _ref(st, cfg, ctx, p, 3, eng.pool.max_len))
+
+
+# -- hysteresis / no-thrash ----------------------------------------------
+
+def test_oscillation_never_thrashes_or_retraces_per_step(served):
+    """A fast square-wave trace (period 2 < cooldown 4): after the first
+    reclaim the hysteresis band swallows every flip — plan changes and
+    generate_step traces are bounded by band crossings, not steps."""
+    cfg, st, ctx = served
+    cfgf = dataclasses.replace(cfg, name=cfg.name + "-gov-osc")
+    ctxf = ctx.with_cfg(cfgf)
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget, cooldown_steps=4)
+    eng = Engine(ctxf, st.params, n_slots=2, max_len=16, governor=gov)
+    prompts = [p[:6] for p in _prompts(cfg, 3, seed=57)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(tokens=p, max_new=6, rid=i))
+    trace = pressure_trace("oscillate", boot_bytes=budget.budget_bytes,
+                           low_bytes=2 * pn, n_steps=64, period=2, seed=9)
+    engine_mod.TRACE_COUNTS.clear()
+    with FaultInjector().memory_pressure(trace) as probe:
+        eng.drain()
+        steps_under_trace = probe.executions
+    assert steps_under_trace >= 8            # the trace really drove steps
+    # one reclaim when the first low lands; flips inside the band do
+    # nothing; at most one regrow if the tail held high long enough
+    assert gov.plan_changes <= 2, gov.snapshot()
+    assert engine_mod.TRACE_COUNTS["generate_step"] <= 1 + gov.plan_changes
+    assert all(c.finished in ACCOUNTED for c in eng.completions)
+    by_rid = {c.rid: c for c in eng.completions}
+    for i, p in enumerate(prompts):
+        if by_rid[i].finished == "max_new":
+            np.testing.assert_array_equal(
+                by_rid[i].tokens,
+                _ref(st, cfg, ctx, p, 6, eng.pool.max_len),
+                err_msg=f"survivor {i} diverged under oscillation")
+
+
+def test_ramp_reclaims_then_regrows_to_boot(served):
+    """A ramp down and back up: reclaim tracks the descent immediately,
+    regrow climbs behind hysteresis (far fewer plan changes than steps),
+    and the engine ends back at the boot envelope."""
+    cfg, st, ctx = served
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget, cooldown_steps=2)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, governor=gov)
+    trace = pressure_trace("ramp", boot_bytes=budget.budget_bytes,
+                           low_bytes=2 * pn, n_steps=30, seed=13)
+    with FaultInjector().memory_pressure(trace):
+        for _ in range(len(trace) + 10):     # hold_last keeps boot at end
+            eng.step()
+    assert eng.pool.n_pages_usable == eng.pool.n_pages   # fully regrown
+    assert not gov.refusing
+    assert 0 < gov.plan_changes < len(trace)
+    assert FALLBACK_COUNTS["pressure_regrow"] >= 1
+    lat = gov.snapshot()["rung_latency_s"]
+    assert "retire_kv" in lat and lat["retire_kv"] >= 0.0
+
+
+# -- accounting under every trace kind -----------------------------------
+
+@pytest.mark.parametrize("kind", PRESSURE_KINDS)
+def test_every_trace_kind_drains_fully_accounted(served, kind):
+    """The blanket invariant: any trace kind, staggered arrivals — the
+    engine drains, and every request ends as an accounted Completion."""
+    cfg, st, ctx = served
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget, cooldown_steps=3)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, governor=gov)
+    prompts = [p[:6] for p in _prompts(cfg, 4, seed=59)]
+    trace = pressure_trace(kind, boot_bytes=budget.budget_bytes,
+                           low_bytes=2 * pn, n_steps=48)
+    with FaultInjector().memory_pressure(trace):
+        submitted = 0
+        while submitted < 4 or eng.health()["occupied"] \
+                or eng.health()["queued"]:
+            if submitted < 4 and eng.steps >= 2 * submitted:
+                eng.submit(Request(tokens=prompts[submitted], max_new=5,
+                                   rid=submitted))
+                submitted += 1
+            eng.step()
+    reasons = {c.rid: c.finished for c in eng.completions}
+    assert set(reasons) == {0, 1, 2, 3}, reasons
+    assert all(r in ACCOUNTED for r in reasons.values()), reasons
+    # the accounted KV footprint respects the applied plan
+    assert eng.pool.n_pages_usable == gov.applied_plan.pages
+    by_rid = {c.rid: c for c in eng.completions}
+    for i, p in enumerate(prompts):
+        if by_rid[i].finished == "max_new":
+            np.testing.assert_array_equal(
+                by_rid[i].tokens, _ref(st, cfg, ctx, p, 5, eng.pool.max_len),
+                err_msg=f"survivor {i} diverged under {kind} trace")
+
+
+# -- injection seam ------------------------------------------------------
+
+def test_memory_pressure_seam_drives_governor(served):
+    cfg, st, ctx = served
+    budget, pn = _kv_budget(cfg)
+    gov = MemoryGovernor(budget)
+    eng = Engine(ctx, st.params, n_slots=2, max_len=16, governor=gov)
+    with FaultInjector().memory_pressure([3 * pn, 2 * pn]) as probe:
+        eng.step()
+        assert gov.target_bytes == 3 * pn
+        eng.step()
+        assert gov.target_bytes == 2 * pn
+        eng.step()                           # hold_last repeats the tail
+        assert gov.target_bytes == 2 * pn
+    assert probe.executions == 3
+    eng.step()                               # seam restored: no signal
+    assert gov.target_bytes == 2 * pn
+    snap = eng.health()["pressure"]
+    assert snap["applied_bytes"] == 2 * pn
+    assert snap["kv_pages_usable"] == 2
+
+
+# -- tiered residency: experts absorb the deficit first ------------------
+
+def test_governor_trims_expert_cache_before_kv():
+    """MoE under tiered residency: a deficit smaller than the expert
+    cache trims capacity (rung 1) and pauses prefetch, leaving the KV
+    pool untouched; recovery regrows capacity and resumes prefetch.
+    Outputs stay bitwise-equal throughout (the residency parity
+    contract at any capacity ≥ 1)."""
+    from repro.serve.residency import ResidencyManager
+    cfg = get_config("deepseek-v2-lite-16b").smoke
+    cfg = dataclasses.replace(cfg, name=cfg.name + "-gov-tier",
+                              capacity_factor=float(cfg.n_experts))
+    params = LM.init_lm(jax.random.PRNGKey(0), cfg, jnp.float32)
+    st = build_serve_params(
+        params, CompressionPolicy(mode="compressed", min_weight_size=1024))
+    ctx = ServeContext.from_state(cfg, st)
+    prompts = [p[:6] for p in _prompts(cfg, 2, seed=61)]
+    refs = [_ref(st, cfg, ctx, p, 4, 16) for p in prompts]
+
+    mgr = ResidencyManager(st, cfg, capacity=3)
+    unit = mgr.n_layers * mgr.bytes_per_expert
+    pool = PagedKVPool(cfg, 2, 16, page_size=8)
+    kv_boot = pool.n_pages * pool.page_nbytes()
+    budget = device_budget(kv_boot + 3 * unit, expert_bytes=unit * 3,
+                           kv_bytes=kv_boot)
+    gov = MemoryGovernor(budget, cooldown_steps=2)
+    eng = Engine(dataclasses.replace(ctx, residency=mgr), st.params,
+                 n_slots=2, max_len=16, governor=gov)
+    eng.submit(Request(tokens=prompts[0], max_new=4, rid=0))
+    eng.step()
+    gov.set_budget(kv_boot + unit)       # deficit = 2 experts/layer
+    eng.step()
+    assert mgr.capacity == 1
+    assert not mgr.prefetch_enabled      # paused under pressure
+    assert eng.pool.n_pages_usable == eng.pool.n_pages   # KV untouched
+    assert FALLBACK_COUNTS["pressure_trim"] == 1
+    assert FALLBACK_COUNTS["pressure_kv_retire"] == 0
+    eng.drain()
+    gov.set_budget(budget.budget_bytes)  # sustained recovery
+    for _ in range(gov.cooldown_steps + 1):
+        eng.step()
+    assert mgr.capacity == 3
+    assert mgr.prefetch_enabled          # resumed at full recovery
+    eng.submit(Request(tokens=prompts[1], max_new=4, rid=1))
+    eng.drain()
+    by_rid = {c.rid: c for c in eng.completions}
+    for i in range(2):
+        np.testing.assert_array_equal(
+            by_rid[i].tokens, refs[i],
+            err_msg=f"request {i} diverged across trim/regrow")
+    eng.close()
+    assert not any(t.name == "residency-prefetch" and t.is_alive()
+                   for t in threading.enumerate())
+
+
+# -- teardown ------------------------------------------------------------
+
+def test_engine_close_is_idempotent_and_context_managed(served):
+    cfg, st, ctx = served
+    with Engine(ctx, st.params, n_slots=1, max_len=16) as eng:
+        p = _prompts(cfg, 1, seed=63)[0][:6]
+        eng.submit(Request(tokens=p, max_new=2))
+        eng.drain()
+    eng.close()                          # second close: no-op

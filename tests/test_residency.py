@@ -278,3 +278,99 @@ def test_cache_bytes_capacity_and_budget(served):
     assert "tiered" in b.summary()
     full = device_budget(1 << 40, expert_bytes=1 << 20)
     assert full.fully_resident
+
+
+# -- runtime capacity (memory-pressure governor seam) -------------------
+
+def test_runtime_capacity_shrink_and_regrow_bitwise(served):
+    """Mid-stream set_capacity — down to 1, then back up — keeps the
+    scheduler's outputs bitwise-equal to an undisturbed run: trims
+    compact MRU-first, regrows add vacant slots, and the fetch/replay
+    protocol re-fetches whatever the next step routes to."""
+    cfg, st, ctx = served
+    rng = np.random.RandomState(43)
+    prompts = [rng.randint(0, cfg.vocab_size,
+                           int(rng.randint(4, 10))).astype(np.int32)
+               for _ in range(3)]
+
+    def run_trace(capacities):
+        """capacities: step index -> set_capacity target (applied at the
+        step fence, mid-decode)."""
+        mgr = ResidencyManager(st, cfg, capacity=3)
+        eng = ResilientEngine(cfg, st, residency=mgr).scheduler(
+            n_slots=2, max_len=32, page_size=8)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(tokens=p, max_new=6, rid=i))
+        while eng.health()["occupied"] or eng.health()["queued"]:
+            if eng.steps in capacities:
+                mgr.set_capacity(capacities[eng.steps])
+            eng.step()
+        eng.close()
+        return {c.rid: np.asarray(c.tokens) for c in eng.completions}
+
+    ref = run_trace({})
+    got = run_trace({2: 1, 6: 3})        # shrink mid-decode, regrow later
+    for i in range(len(prompts)):
+        assert np.array_equal(ref[i], got[i]), \
+            f"rid {i} diverged across runtime capacity shrink/regrow"
+    assert layers.MATERIALIZE_COUNTS["packed_stacked"] == 0
+    # bounds: clamps to [1, n_experts]; no-op change is free
+    mgr = ResidencyManager(st, cfg, capacity=2, prefetch=False)
+    mgr.set_capacity(0)
+    assert mgr.capacity == 1 and mgr.overshoot_bytes > 0
+    mgr.set_capacity(cfg.n_experts + 5)
+    assert mgr.capacity == cfg.n_experts
+
+
+def test_too_small_budget_warns_and_surfaces_overshoot(served):
+    """satellite: a cache budget below one expert per layer used to be
+    silently clamped to capacity 1 — it must warn, record the overshoot
+    in the snapshot (-> health()['residency']), and show up in
+    DeviceBudget.summary(expert_cache_used=...)."""
+    cfg, st, ctx = served
+    probe = ResidencyManager(st, cfg, capacity=1)
+    floor = probe.n_layers * probe.bytes_per_expert
+    with pytest.warns(RuntimeWarning, match="overshoot"):
+        mgr = ResidencyManager(st, cfg, cache_bytes=floor // 2)
+    assert mgr.capacity == 1
+    assert mgr.overshoot_bytes == floor - floor // 2
+    assert mgr.snapshot()["overshoot_bytes"] == mgr.overshoot_bytes
+    # an adequate budget records zero overshoot
+    assert probe.overshoot_bytes == 0
+    from repro.core.policy import device_budget
+    b = device_budget(floor // 2, expert_bytes=10 * floor)
+    s = b.summary(expert_cache_used=floor)
+    assert "OVERSHOOT" in s
+    assert "OVERSHOOT" not in b.summary(expert_cache_used=0)
+
+
+def test_close_stops_prefetch_worker_no_leaked_threads(served):
+    """satellite: Engine/ResilientEngine teardown must stop the
+    residency-prefetch worker thread; close is idempotent and the
+    context-manager form covers the scheduler path."""
+    import threading
+    cfg, st, ctx = served
+
+    def prefetch_threads():
+        return {t for t in threading.enumerate()
+                if t.name == "residency-prefetch" and t.is_alive()}
+
+    before = prefetch_threads()          # workers leaked by earlier tests
+    mgr = ResidencyManager(st, cfg, capacity=2)
+    with ResilientEngine(cfg, st, residency=mgr) as reng:
+        eng = reng.scheduler(n_slots=2, max_len=32, page_size=8)
+        rng = np.random.RandomState(47)
+        p = rng.randint(0, cfg.vocab_size, 6).astype(np.int32)
+        eng.submit(Request(tokens=p, max_new=3, rid=0))
+        eng.drain()
+        assert len(prefetch_threads() - before) == 1     # worker ran
+    assert prefetch_threads() - before == set()          # ...and was joined
+    mgr.close()                                          # idempotent
+    # a ResilientEngine that never built a scheduler still closes the
+    # manager it owns
+    mgr2 = ResidencyManager(st, cfg, capacity=2)
+    mgr2._start_worker()
+    reng2 = ResilientEngine(cfg, st, residency=mgr2)
+    assert len(prefetch_threads() - before) == 1
+    reng2.close()
+    assert prefetch_threads() - before == set()
